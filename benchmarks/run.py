@@ -1,0 +1,283 @@
+"""Benchmark harness — one function per paper table/claim plus the
+roofline-table generator. Prints ``name,us_per_call,derived`` CSV rows.
+
+Paper analogues:
+  fps_host_loop     — PolyBeast throughput (frames/s): DynamicBatcher +
+                      actor threads + learner queue (the §4 FPS claim).
+  fps_on_device     — the TPU-native (Anakin) rollout+learn step FPS.
+  learner_step      — batched IMPALA learner step latency.
+  vtrace            — V-trace computation (scan and Pallas-interpret paths).
+  attention         — chunked-vs-dense attention latency (model path).
+  dynamic_batcher   — batching overhead per request.
+  generate          — serving decode throughput (tokens/s).
+  roofline_table    — re-prints the dry-run roofline terms per (arch, shape)
+                      from experiments/dryrun (run launch.dryrun first).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timeit(fn, n=20, warmup=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+def bench_vtrace():
+    from repro.core.vtrace import vtrace_from_importance_weights
+    from repro.kernels import ops
+    t, b = 80, 256
+    rng = np.random.default_rng(0)
+    args = [jnp.asarray(rng.normal(0, 1, (t, b)), jnp.float32)
+            for _ in range(4)] + [jnp.asarray(rng.normal(0, 1, (b,)),
+                                              jnp.float32)]
+    f = jax.jit(vtrace_from_importance_weights)
+    us = timeit(lambda: jax.block_until_ready(f(*args)))
+    row("vtrace_scan_T80_B256", us, f"{t*b/us:.1f}steps/us")
+
+    g = jax.jit(lambda *a: ops.vtrace_from_importance_weights_kernel(
+        *a, interpret=True))
+    us = timeit(lambda: jax.block_until_ready(g(*args)), n=3)
+    row("vtrace_pallas_interp_T80_B256", us, "interpret-mode")
+
+
+def bench_learner_step():
+    from repro.configs.atari_impala import small_train
+    from repro.core import learner as L
+    from repro.envs import catch
+    from repro.models.convnet import init_agent, minatar_net
+    from repro.optim import make_optimizer
+    env = catch.make()
+    tc = small_train(unroll_length=20, batch_size=32)
+    init_fn, apply_fn = minatar_net(env.obs_shape, env.num_actions)
+    params, _ = init_agent(init_fn, jax.random.PRNGKey(0))
+    opt = make_optimizer(tc)
+    opt_state = opt.init(params)
+    step = jax.jit(L.make_train_step(apply_fn, opt, tc))
+    rng = np.random.default_rng(0)
+    t, b = tc.unroll_length, tc.batch_size
+    batch = {
+        "obs": jnp.asarray(rng.random((t + 1, b) + env.obs_shape),
+                           jnp.float32),
+        "action": jnp.asarray(rng.integers(0, 3, (t, b)), jnp.int32),
+        "behavior_logits": jnp.asarray(rng.normal(0, 1, (t, b, 3)),
+                                       jnp.float32),
+        "reward": jnp.asarray(rng.normal(0, 1, (t, b)), jnp.float32),
+        "done": jnp.asarray(rng.random((t, b)) > 0.9),
+    }
+    us = timeit(lambda: jax.block_until_ready(
+        step(params, opt_state, jnp.int32(0), batch)[2]["loss"]))
+    row("learner_step_T20_B32", us, f"{t*b/(us/1e6):.0f}fps")
+
+
+def bench_fps_on_device(steps=30):
+    """Compiled rollout+learn (the PolyBeast->TPU adaptation)."""
+    from repro.configs.atari_impala import small_train
+    from repro.core import learner as L, rollout as R
+    from repro.envs import catch
+    from repro.models.convnet import init_agent, minatar_net
+    from repro.optim import make_optimizer
+    env = catch.make()
+    tc = small_train(unroll_length=20, batch_size=32)
+    init_fn, apply_fn = minatar_net(env.obs_shape, env.num_actions)
+    params, _ = init_agent(init_fn, jax.random.PRNGKey(0))
+    opt = make_optimizer(tc)
+    opt_state = opt.init(params)
+    key = jax.random.PRNGKey(1)
+    carry = R.env_reset_batch(env, key, tc.batch_size)
+    unroll = R.make_unroll(env, apply_fn, tc.unroll_length)
+    train_step = L.make_train_step(apply_fn, opt, tc)
+
+    @jax.jit
+    def combined(params, opt_state, step, carry, key):
+        carry, ro = unroll(params, carry, key)
+        params, opt_state, m = train_step(params, opt_state, step, ro)
+        return params, opt_state, carry, m
+
+    params, opt_state, carry, _ = combined(params, opt_state, jnp.int32(0),
+                                           carry, key)
+    t0 = time.perf_counter()
+    m = None
+    for s in range(steps):
+        key, k = jax.random.split(key)
+        params, opt_state, carry, m = combined(
+            params, opt_state, jnp.int32(s), carry, k)
+    jax.block_until_ready(m["loss"])
+    dt = time.perf_counter() - t0
+    frames = steps * tc.batch_size * tc.unroll_length
+    row("fps_on_device_catch", dt / steps * 1e6, f"{frames/dt:.0f}fps")
+
+
+def bench_fps_host_loop(duration=6.0):
+    """MonoBeast/PolyBeast host actor loop throughput (§4 FPS analogue)."""
+    from repro.configs.atari_impala import small_train
+    from repro.core.actor_pool import ActorPool, start_inference_thread
+    from repro.core.batcher import BatchingQueue, DynamicBatcher
+    from repro.envs import catch
+    from repro.envs.base import HostEnv
+    from repro.models.convnet import init_agent, minatar_net
+    env0 = catch.make()
+    tc = small_train(unroll_length=20, batch_size=8, num_actors=8)
+    init_fn, apply_fn = minatar_net(env0.obs_shape, env0.num_actions)
+    params, _ = init_agent(init_fn, jax.random.PRNGKey(0))
+    policy = jax.jit(lambda obs: apply_fn(params, obs).policy_logits)
+    inference = DynamicBatcher(max_batch_size=8, timeout_ms=2)
+    learner_queue = BatchingQueue(tc.batch_size, batch_dim=1, max_items=64)
+    pool = ActorPool(lambda seed: HostEnv(env0, seed), tc.num_actors,
+                     tc.unroll_length, inference, learner_queue)
+    start_inference_thread(inference,
+                           lambda obs: policy(jnp.asarray(obs)))
+    pool.start()
+    consumed = 0
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < duration:
+        batch = learner_queue.get(timeout=1.0)
+        if batch is not None:
+            consumed += batch["reward"].size
+    dt = time.perf_counter() - t0
+    pool.stop()
+    row("fps_host_loop_catch", dt * 1e6, f"{consumed/dt:.0f}fps")
+
+
+def bench_dynamic_batcher():
+    from repro.core.batcher import DynamicBatcher
+    b = DynamicBatcher(max_batch_size=16, timeout_ms=1)
+    n_req = 512
+    done = threading.Event()
+
+    def consumer():
+        served = 0
+        while served < n_req:
+            got = b.get_batch(timeout=2.0)
+            if got is None:
+                break
+            inputs, respond, n = got
+            respond(inputs)
+            served += n
+        done.set()
+
+    t = threading.Thread(target=consumer, daemon=True)
+    x = np.zeros((84,), np.float32)
+    t0 = time.perf_counter()
+    t.start()
+    threads = [threading.Thread(target=lambda: [b.compute(x)
+                                                for _ in range(n_req // 16)])
+               for _ in range(16)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    done.wait(timeout=5)
+    dt = time.perf_counter() - t0
+    row("dynamic_batcher_roundtrip", dt / n_req * 1e6,
+        f"{n_req/dt:.0f}req/s")
+
+
+def bench_attention():
+    import dataclasses
+    from repro.configs import get_reduced_config
+    from repro.models import attention as A
+    from repro.models.common import split_params
+    cfg = dataclasses.replace(get_reduced_config("qwen3-32b"),
+                              attn_chunk=128)
+    params = split_params(A.attn_init(jax.random.PRNGKey(0), cfg, "attn"))[0]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 512, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.arange(512)
+    for impl in ("xla", "xla_chunked", "xla_chunked_skip"):
+        f = jax.jit(lambda x, impl=impl: A.attn_apply(
+            params, x, cfg=cfg, kind="attn", positions=pos, impl=impl)[0])
+        us = timeit(lambda: jax.block_until_ready(f(x)), n=10)
+        row(f"attention_{impl}_S512", us, "")
+
+
+def bench_generate():
+    from repro.configs import get_reduced_config
+    from repro.core import generate as G
+    from repro.models import model as M
+    cfg = get_reduced_config("qwen3-4b")
+    params, _ = M.init(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (8, 15), 0,
+                                cfg.vocab_size)
+
+    def f():
+        return jax.block_until_ready(
+            G.generate(params, prompt, jax.random.PRNGKey(2), cfg=cfg,
+                       num_steps=32)["tokens"])
+
+    us = timeit(f, n=5)
+    row("generate_B8_P15_N32", us, f"{8*32/(us/1e6):.0f}tok/s")
+
+
+def bench_ssd_chunk():
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    bh, l, n, p = 8, 128, 64, 64
+    c = jnp.asarray(rng.normal(0, 1, (bh, l, n)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, (bh, l, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (bh, l, p)), jnp.float32)
+    da = jnp.asarray(-rng.random((bh, l, 1)) * 0.1, jnp.float32)
+    h = jnp.asarray(rng.normal(0, 1, (bh, p, n)), jnp.float32)
+    f = jax.jit(lambda *a: ref.ref_ssd_chunk(*a))
+    us = timeit(lambda: jax.block_until_ready(f(c, b, x, da, h)[0]), n=10)
+    row("ssd_chunk_jnp_BH8_L128", us, "")
+    g = jax.jit(lambda *a: ops.ssd_chunk(*a, interpret=True))
+    us = timeit(lambda: jax.block_until_ready(g(c, b, x, da, h)[0]), n=3)
+    row("ssd_chunk_pallas_interp", us, "interpret-mode")
+
+
+def roofline_table():
+    """Print the §Roofline table from the dry-run artifacts (preferring the
+    post-§Perf optimized sweep)."""
+    files = (sorted(glob.glob("experiments/dryrun_optimized/*.json"))
+             or sorted(glob.glob("experiments/dryrun/*.json"))
+             or sorted(glob.glob("experiments/dryrun_baseline/*.json")))
+    if not files:
+        print("# roofline: no dry-run artifacts; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    print("# arch,shape,mesh,rules,compute_s,memory_s,collective_s,"
+          "bottleneck,useful_ratio,mem_GiB")
+    for f in files:
+        d = json.load(open(f))
+        r = d["roofline"]
+        print(f"roofline,{d['arch']},{d['shape']},{d['mesh']},{d['rules']},"
+              f"{r['compute_s']:.2e},{r['memory_s']:.2e},"
+              f"{r['collective_s']:.2e},{r['bottleneck']},"
+              f"{r['useful_ratio']:.2f},"
+              f"{d['memory']['per_device_total']/2**30:.2f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_vtrace()
+    bench_learner_step()
+    bench_fps_on_device()
+    bench_fps_host_loop()
+    bench_dynamic_batcher()
+    bench_attention()
+    bench_generate()
+    bench_ssd_chunk()
+    roofline_table()
+
+
+if __name__ == "__main__":
+    main()

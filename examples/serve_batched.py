@@ -1,0 +1,16 @@
+"""Batched serving with the PolyBeast inference queue: concurrent request
+threads -> DynamicBatcher -> compiled prefill+decode -> scattered replies.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b
+(always uses the reduced config on CPU; pick any of the 10 archs)
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--reduced" not in argv:
+        argv.append("--reduced")
+    main(argv)

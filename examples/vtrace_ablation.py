@@ -1,0 +1,86 @@
+"""V-trace off-policy-correction ablation (the paper's §2 motivation,
+quantified): actors run a LAGGED copy of the policy (as they do in any
+asynchronous IMPALA deployment); the learner either
+
+  * corrected   — V-trace with the true behavior logits (TorchBeast), or
+  * uncorrected — pretends the data is on-policy (rho forced to 1).
+
+With no lag both match A2C; with lag the uncorrected learner trains on a
+biased policy-gradient. Results are recorded in EXPERIMENTS.md §Validation.
+
+  PYTHONPATH=src python examples/vtrace_ablation.py [--steps 700 --lag 10]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.atari_impala import small_train
+from repro.core import learner as learner_lib
+from repro.core import rollout as rollout_lib
+from repro.envs import catch
+from repro.models.convnet import init_agent, minatar_net
+from repro.optim import make_optimizer
+
+
+def run(corrected: bool, lag: int, steps: int, seed: int = 0,
+        lr: float = 2e-3):
+    env = catch.make()
+    tc = small_train(unroll_length=20, batch_size=32, learning_rate=lr,
+                     total_steps=steps + 1000)
+    init_fn, apply_fn = minatar_net(env.obs_shape, env.num_actions)
+    params, _ = init_agent(init_fn, jax.random.PRNGKey(seed))
+    behavior_params = params
+    opt = make_optimizer(tc)
+    opt_state = opt.init(params)
+    key = jax.random.PRNGKey(seed + 1)
+    carry = rollout_lib.env_reset_batch(env, key, tc.batch_size)
+    unroll = jax.jit(rollout_lib.make_unroll(env, apply_fn,
+                                             tc.unroll_length))
+    train_step = jax.jit(learner_lib.make_train_step(apply_fn, opt, tc))
+
+    @jax.jit
+    def fake_onpolicy(params, batch):
+        """Overwrite behavior logits with the learner's own — the
+        'uncorrected' arm (rho == 1 identically)."""
+        out = apply_fn(params, batch["obs"][:-1])
+        return dict(batch, behavior_logits=jax.lax.stop_gradient(
+            out.policy_logits))
+
+    rewards = []
+    for step in range(steps):
+        if lag == 0 or step % lag == 0:
+            behavior_params = params           # actor weight sync
+        key, k = jax.random.split(key)
+        carry, batch = unroll(behavior_params, carry, k)
+        if not corrected:
+            batch = fake_onpolicy(params, batch)
+        params, opt_state, m = train_step(params, opt_state,
+                                          jnp.int32(step), batch)
+        rewards.append(float(m["reward_per_step"]))
+    return np.mean(rewards[-100:])
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=700)
+    p.add_argument("--lag", type=int, default=40)
+    p.add_argument("--lr", type=float, default=5e-3)
+    p.add_argument("--seeds", type=int, default=3)
+    args = p.parse_args()
+
+    print(f"arm,lag,mean_final_reward_over_{args.seeds}_seeds "
+          f"(optimal +0.100)")
+    for corrected in (True, False):
+        for lag in (0, args.lag):
+            rs = [run(corrected, lag, args.steps, seed=s, lr=args.lr)
+                  for s in range(args.seeds)]
+            arm = "vtrace" if corrected else "uncorrected"
+            print(f"{arm},{lag},{np.mean(rs):+.3f} (min {min(rs):+.3f})",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

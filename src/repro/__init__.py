@@ -1,0 +1,2 @@
+"""JAXBeast: a JAX platform for distributed RL (TorchBeast reproduction)."""
+__version__ = "1.0.0"

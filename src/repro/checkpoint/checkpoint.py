@@ -1,0 +1,77 @@
+"""Pytree checkpointing to .npz (no orbax in the container).
+
+Flattens the (params, opt_state, step, ...) tree with '/'-joined key paths;
+restores into the same structure. Atomic via write-to-temp + rename.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_key_str(k) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(k):
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"#{k.idx}"
+    return str(k)
+
+
+def save(path: str, tree, metadata: dict | None = None) -> None:
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __metadata__=json.dumps(metadata or {}), **flat)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (values replaced)."""
+    with np.load(path, allow_pickle=False) as data:
+        paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path_keys, leaf in paths_leaves:
+            key = "/".join(_key_str(k) for k in path_keys)
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key!r}")
+            arr = data[key]
+            if hasattr(leaf, "dtype") and arr.shape != leaf.shape:
+                raise ValueError(
+                    f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+            leaves.append(arr)
+        meta = json.loads(str(data["__metadata__"]))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def latest_step_path(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for f in os.listdir(ckpt_dir):
+        if f.startswith("step_") and f.endswith(".npz"):
+            try:
+                steps.append((int(f[5:-4]), os.path.join(ckpt_dir, f)))
+            except ValueError:
+                pass
+    return max(steps)[1] if steps else None

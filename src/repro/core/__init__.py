@@ -1,0 +1,4 @@
+"""IMPALA core: V-trace, losses, rollouts, queueing, learner (the paper's
+primary contribution)."""
+from repro.core import (vtrace, losses, rollout, batcher, actor_pool,  # noqa: F401
+                        generate, learner)

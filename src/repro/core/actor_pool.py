@@ -1,0 +1,107 @@
+"""Host-loop actor pool — the MonoBeast/PolyBeast actor architecture in
+Python threads over functional JAX envs.
+
+Each actor thread runs its environment copy, sends observations through the
+shared DynamicBatcher (the inference queue; evaluated centrally in batch),
+accumulates unroll_length transitions, and puts the rollout into the
+BatchingQueue (the learner queue). An inference thread drains the
+DynamicBatcher with the jitted policy — mirroring polybeast.py's
+``inference_thread`` — and the learner iterates the BatchingQueue.
+
+This path exists for environments that cannot be compiled (the paper's
+Atari case). The compiled alternative is core/rollout.py (DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.batcher import BatchingQueue, Closed, DynamicBatcher
+from repro.envs.base import HostEnv
+
+
+class ActorPool:
+    def __init__(self, env_fn: Callable[[int], HostEnv], num_actors: int,
+                 unroll_length: int, inference: DynamicBatcher,
+                 learner_queue: BatchingQueue, seed: int = 0):
+        self.env_fn = env_fn
+        self.num_actors = num_actors
+        self.unroll_length = unroll_length
+        self.inference = inference
+        self.learner_queue = learner_queue
+        self.seed = seed
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+        self.steps = 0  # total env frames (for FPS accounting)
+        self._steps_lock = threading.Lock()
+
+    def _actor_loop(self, idx: int):
+        env = self.env_fn(self.seed + idx)
+        obs = env.reset()
+        try:
+            while not self._stop.is_set():
+                traj = {"obs": [obs], "action": [], "behavior_logits": [],
+                        "reward": [], "done": []}
+                for _ in range(self.unroll_length):
+                    logits = self.inference.compute(
+                        np.asarray(obs, np.float32))
+                    # sample on the actor (host) side
+                    u = np.random.default_rng(
+                        abs(hash((idx, self.steps, len(traj["action"]))))
+                        % 2**32).gumbel(size=logits.shape)
+                    action = int(np.argmax(logits + u))
+                    obs, reward, done, _ = env.step(action)
+                    traj["obs"].append(obs)
+                    traj["action"].append(action)
+                    traj["behavior_logits"].append(logits)
+                    traj["reward"].append(reward)
+                    traj["done"].append(done)
+                rollout = {
+                    "obs": np.stack(traj["obs"]).astype(np.float32),
+                    "action": np.asarray(traj["action"], np.int32),
+                    "behavior_logits": np.stack(traj["behavior_logits"]),
+                    "reward": np.asarray(traj["reward"], np.float32),
+                    "done": np.asarray(traj["done"], bool),
+                }
+                self.learner_queue.put(rollout)
+                with self._steps_lock:
+                    self.steps += self.unroll_length
+        except Closed:
+            pass
+
+    def start(self):
+        for i in range(self.num_actors):
+            t = threading.Thread(target=self._actor_loop, args=(i,),
+                                 daemon=True, name=f"actor-{i}")
+            t.start()
+            self._threads.append(t)
+
+    def stop(self):
+        self._stop.set()
+        self.inference.close()
+        self.learner_queue.close()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+
+def start_inference_thread(batcher: DynamicBatcher, policy_fn) -> threading.Thread:
+    """polybeast.py's ``infer``: drain the inference queue with the jitted
+    policy. policy_fn: (B, *obs) -> (B, A) logits (numpy in/out)."""
+    def loop():
+        while True:
+            try:
+                got = batcher.get_batch(timeout=1.0)
+            except Closed:
+                return
+            if got is None:
+                continue
+            obs, respond, _ = got
+            respond(np.asarray(policy_fn(obs)))
+
+    t = threading.Thread(target=loop, daemon=True, name="inference")
+    t.start()
+    return t

@@ -1,0 +1,70 @@
+"""Autoregressive generation with the decode cache (the actor-side
+inference path for LLM-policy IMPALA, and the serving loop).
+
+``generate`` runs prefill over the prompt then a compiled ``lax.scan`` of
+single-token decode steps, sampling from the policy and recording the
+behavior log-prob of every sampled token — exactly the data V-trace needs
+from the behavior policy (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_steps",
+                                             "temperature"))
+def generate(params, prompt, key, *, cfg, num_steps: int,
+             temperature: float = 1.0, vision=None):
+    """prompt: (B, P) int32. Returns dict:
+      tokens    (B, P + num_steps)
+      logprob   (B, num_steps)  behavior log-prob of each sampled token
+      entropy   (B, num_steps)  policy entropy at each step
+      baseline  (B, num_steps)  value estimates V(s_t)
+    """
+    b, p = prompt.shape
+    total = p + num_steps
+    hidden, _, cache = model_lib.prefill(params, prompt, cfg=cfg,
+                                         vision=vision, cache_seq_len=total)
+    logits0 = model_lib.logits_from_hidden(params, cfg, hidden[:, -1:])
+    base0 = model_lib.baseline_from_hidden(params, cfg, hidden[:, -1:])
+
+    def sample(key, logits):
+        logits = logits / temperature
+        tok = jax.random.categorical(key, logits)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        chosen = jnp.take_along_axis(lp, tok[..., None], axis=-1)[..., 0]
+        ent = -jnp.sum(jnp.exp(lp) * lp, axis=-1)
+        return tok.astype(jnp.int32), chosen, ent
+
+    key, k0 = jax.random.split(key)
+    tok, lp, ent = sample(k0, logits0[:, 0])
+
+    def step(carry, key):
+        cache, tok, lp, ent, base, pos = carry
+        logits, baseline, cache = model_lib.serve_step(
+            params, tok[:, None], cache, pos, cfg=cfg)
+        ntok, nlp, nent = sample(key, logits[:, 0])
+        out = {"token": tok, "logprob": lp, "entropy": ent,
+               "baseline": base}
+        return (cache, ntok, nlp, nent, baseline[:, 0], pos + 1), out
+
+    keys = jax.random.split(key, num_steps)
+    carry = (cache, tok, lp, ent,
+             base0[:, 0] if base0 is not None else jnp.zeros((b,)),
+             jnp.asarray(p, jnp.int32))
+    _, traj = jax.lax.scan(step, carry, keys)
+
+    tokens = jnp.concatenate([prompt, traj["token"].T], axis=1)
+    return {
+        "tokens": tokens,
+        "logprob": traj["logprob"].T,
+        "entropy": traj["entropy"].T,
+        "baseline": traj["baseline"].T,
+    }

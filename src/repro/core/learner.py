@@ -1,0 +1,197 @@
+"""IMPALA learner steps.
+
+``make_train_step``      — paper-faithful agent path (full behavior logits,
+                           conv/small-action agents; TorchBeast polybeast.py
+                           learner loop body).
+``make_lm_train_step``   — LLM-policy path (tokens are actions; chosen-action
+                           behavior log-probs; chunked vocab head). This is
+                           the program lowered for the ``train_4k`` shape.
+
+Both return pure functions suitable for jax.jit/pjit:
+  (params, opt_state, step, batch[, extras]) -> (params, opt_state, metrics)
+Gradient synchronisation across the mesh data/pod axes comes from sharding
+propagation (grads of replicated params -> all-reduce), the TPU analogue of
+TorchBeast's multi-learner-thread hogwild updates (DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.models import model as model_lib
+from repro.optim.optimizers import apply_updates
+
+
+def make_train_step(agent_apply: Callable, opt, train_cfg):
+    """Paper-faithful IMPALA learner step over a rollout batch.
+
+    batch: time-major dict (see core/rollout.py):
+      obs (T+1,B,...), action (T,B), behavior_logits (T,B,A),
+      reward (T,B), done (T,B)
+    """
+
+    def loss_fn(params, batch):
+        out = agent_apply(params, batch["obs"])       # (T+1, B, ...)
+        target_logits = out.policy_logits[:-1]
+        values = out.baseline[:-1]
+        bootstrap = jax.lax.stop_gradient(out.baseline[-1])
+        discounts = (~batch["done"]).astype(jnp.float32) * train_cfg.discount
+        loss_out = losses.impala_loss_from_logits(
+            target_logits, batch["behavior_logits"], batch["action"],
+            batch["reward"], discounts, values, bootstrap,
+            baseline_cost=train_cfg.baseline_cost,
+            entropy_cost=train_cfg.entropy_cost,
+            clip_rho=train_cfg.vtrace_rho_clip,
+            clip_c=train_cfg.vtrace_c_clip)
+        return loss_out.total, loss_out
+
+    def train_step(params, opt_state, step, batch):
+        grads, loss_out = jax.grad(loss_fn, has_aux=True)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        metrics = {
+            "loss": loss_out.total,
+            "pg_loss": loss_out.pg_loss,
+            "baseline_loss": loss_out.baseline_loss,
+            "entropy_loss": loss_out.entropy_loss,
+            "vs_mean": loss_out.vs_mean,
+            "rho_mean": loss_out.rho_mean,
+            "reward_per_step": batch["reward"].mean(),
+        }
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_recurrent_train_step(agent_apply, opt, train_cfg):
+    """IMPALA learner for recurrent agents: re-runs the LSTM over the
+    unroll from the stored initial core_state (TorchBeast's learner does
+    exactly this), then V-trace as usual. batch adds "core_state"."""
+
+    def loss_fn(params, batch):
+        def step(core_state, xs):
+            obs, pre_done = xs
+            out = agent_apply(params, obs, core_state, pre_done)
+            return out.core_state, (out.policy_logits, out.baseline)
+
+        # re-run the recurrence over the T+1 observations from the stored
+        # initial core_state; pre_done[t] zeroes the state exactly where
+        # the actor did (fresh-episode observations)
+        _, (logits, baselines) = jax.lax.scan(
+            step, batch["core_state"], (batch["obs"], batch["pre_done"]))
+        t = batch["action"].shape[0]
+        target_logits = logits[:t]
+        values = baselines[:t]
+        bootstrap = jax.lax.stop_gradient(baselines[t])
+        discounts = (~batch["done"]).astype(jnp.float32) * train_cfg.discount
+        loss_out = losses.impala_loss_from_logits(
+            target_logits, batch["behavior_logits"], batch["action"],
+            batch["reward"], discounts, values, bootstrap,
+            baseline_cost=train_cfg.baseline_cost,
+            entropy_cost=train_cfg.entropy_cost,
+            clip_rho=train_cfg.vtrace_rho_clip,
+            clip_c=train_cfg.vtrace_c_clip)
+        return loss_out.total, loss_out
+
+    def train_step(params, opt_state, step, batch):
+        grads, loss_out = jax.grad(loss_fn, has_aux=True)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss_out.total, "pg_loss": loss_out.pg_loss,
+                   "entropy_loss": loss_out.entropy_loss,
+                   "reward_per_step": batch["reward"].mean()}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_lm_train_step(cfg, opt, train_cfg, loss_chunk=512,
+                       grad_constraint=None):
+    """IMPALA learner step for LLM policies (DESIGN.md §2).
+
+    grad_constraint: optional fn(grads)->grads applied right after jax.grad
+    — the launcher passes a ZeRO-2 sharding constraint here so the gradient
+    all-reduce becomes a reduce-scatter and the fp32 optimizer temporaries
+    stay sharded over the data axes.
+
+    batch (batch-major; transposed internally for V-trace):
+      tokens            (B, S+1) int32   obs[0..S]; actions are tokens[1:]
+      behavior_logprob  (B, S) float32   mu(a_t|s_t) of the generating policy
+      reward            (B, S) float32
+      done              (B, S) bool
+      [vision]          (B, Sv, d)       VLM patch embeddings (stub)
+    """
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]          # (B, S+1); model sees first S
+        vision = batch.get("vision")
+        # hidden[t] is the state after consuming token t => predicts t+1.
+        # Forward over tokens[:, :-1] keeps S divisible by the chunk sizes.
+        hidden, aux, _ = model_lib.forward(params, tokens[:, :-1], cfg=cfg,
+                                           vision=vision)
+        actions = tokens[:, 1:]
+        unembed = model_lib.unembed_matrix(params, cfg)
+        logprob, entropy = losses.chunked_logprob_entropy(
+            hidden, unembed, actions, chunk=loss_chunk,
+            final_softcap=cfg.final_logit_softcap)
+        values_all = model_lib.baseline_from_hidden(params, cfg, hidden)
+        bootstrap = jnp.zeros((tokens.shape[0],), jnp.float32)
+
+        tm = lambda x: jnp.swapaxes(x, 0, 1)  # noqa: E731  batch->time major
+        discounts = (~batch["done"]).astype(jnp.float32) * train_cfg.discount
+        loss_out = losses.impala_loss_from_logprobs(
+            tm(logprob), tm(entropy), tm(batch["behavior_logprob"]),
+            tm(batch["reward"]), tm(discounts), tm(values_all), bootstrap,
+            baseline_cost=train_cfg.baseline_cost,
+            entropy_cost=train_cfg.entropy_cost,
+            clip_rho=train_cfg.vtrace_rho_clip,
+            clip_c=train_cfg.vtrace_c_clip)
+        lb, zl, _ = aux
+        total = loss_out.total + cfg.router_aux_weight * lb \
+            + cfg.router_z_weight * zl
+        return total, loss_out
+
+    def train_step(params, opt_state, step, batch):
+        grads, loss_out = jax.grad(loss_fn, has_aux=True)(params, batch)
+        if grad_constraint is not None:
+            grads = grad_constraint(grads)
+        updates, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        metrics = {
+            "loss": loss_out.total,
+            "pg_loss": loss_out.pg_loss,
+            "baseline_loss": loss_out.baseline_loss,
+            "entropy_loss": loss_out.entropy_loss,
+            "reward_per_step": batch["reward"].mean(),
+        }
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_lm_pretrain_step(cfg, opt, loss_chunk=512):
+    """Plain next-token-prediction step (substrate completeness: the data
+    pipeline / LM pretraining driver; also the non-RL baseline)."""
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]          # (B, S+1)
+        hidden, aux, _ = model_lib.forward(params, tokens[:, :-1], cfg=cfg,
+                                           vision=batch.get("vision"))
+        unembed = model_lib.unembed_matrix(params, cfg)
+        loss = losses.chunked_softmax_xent(
+            hidden, unembed, tokens[:, 1:], chunk=loss_chunk,
+            final_softcap=cfg.final_logit_softcap)
+        lb, zl, _ = aux
+        return loss + cfg.router_aux_weight * lb + cfg.router_z_weight * zl, loss
+
+    def train_step(params, opt_state, step, batch):
+        grads, xent = jax.grad(loss_fn, has_aux=True)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": xent}
+
+    return train_step

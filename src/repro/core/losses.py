@@ -1,0 +1,132 @@
+"""IMPALA losses (policy gradient + baseline + entropy), plus the
+chunked-vocab variants needed at LLM scale (the (T,B,V) logits tensor for
+V=150k does not fit; we scan over sequence chunks).
+
+Loss definitions match TorchBeast's polybeast.py:
+  pg_loss       = sum_t  -log pi(a_t|s_t) * stop_grad(pg_advantage_t)
+  baseline_loss = 0.5 * sum_t (vs_t - V(s_t))^2
+  entropy_loss  = sum_t sum_a pi log pi          (i.e. negative entropy)
+  total = pg + baseline_cost * baseline + entropy_cost * entropy
+All sums over T and mean... TorchBeast sums over (T, B); we keep SUM over T
+and MEAN over B (configurable via ``reduce``) — the sum convention is the
+paper's, recorded in EXPERIMENTS.md §Validation.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vtrace as vtrace_lib
+
+
+class ImpalaLossOutput(NamedTuple):
+    total: jnp.ndarray
+    pg_loss: jnp.ndarray
+    baseline_loss: jnp.ndarray
+    entropy_loss: jnp.ndarray
+    vs_mean: jnp.ndarray
+    rho_mean: jnp.ndarray
+
+
+def _reduce(x, reduce):
+    return jnp.sum(x) if reduce == "sum" else jnp.sum(jnp.mean(x, axis=1))
+
+
+def impala_loss_from_logits(target_logits, behavior_logits, actions,
+                            rewards, discounts, values, bootstrap_value,
+                            *, baseline_cost=0.5, entropy_cost=0.01,
+                            clip_rho=1.0, clip_c=1.0, reduce="mean"):
+    """Paper-faithful path (full logits, small action spaces). All (T,B,...).
+
+    target_logits/values carry gradients; behavior_* are data.
+    """
+    target_lp_all = jax.nn.log_softmax(target_logits.astype(jnp.float32), -1)
+    target_lp = jnp.take_along_axis(target_lp_all, actions[..., None],
+                                    axis=-1)[..., 0]
+    behavior_lp = vtrace_lib._action_log_probs(behavior_logits, actions)
+
+    vt = vtrace_lib.vtrace_from_importance_weights(
+        jax.lax.stop_gradient(target_lp) - behavior_lp, discounts, rewards,
+        jax.lax.stop_gradient(values), bootstrap_value,
+        clip_rho_threshold=clip_rho, clip_c_threshold=clip_c)
+
+    pg_loss = _reduce(-target_lp * vt.pg_advantages, reduce)
+    baseline_loss = 0.5 * _reduce(jnp.square(vt.vs - values), reduce)
+    probs = jnp.exp(target_lp_all)
+    entropy_loss = _reduce(jnp.sum(probs * target_lp_all, axis=-1), reduce)
+
+    total = pg_loss + baseline_cost * baseline_loss \
+        + entropy_cost * entropy_loss
+    rho = jnp.exp(jax.lax.stop_gradient(target_lp) - behavior_lp)
+    return ImpalaLossOutput(total, pg_loss, baseline_loss, entropy_loss,
+                            vt.vs.mean(), rho.mean())
+
+
+def impala_loss_from_logprobs(target_logprobs, target_entropy,
+                              behavior_logprobs, rewards, discounts, values,
+                              bootstrap_value, *, baseline_cost=0.5,
+                              entropy_cost=0.01, clip_rho=1.0, clip_c=1.0,
+                              reduce="mean"):
+    """LLM-scale path: (T,B) chosen-action log-probs + per-step entropy
+    (computed chunked by the caller). target_logprobs/values/target_entropy
+    carry gradients."""
+    vt = vtrace_lib.vtrace_from_logprobs(
+        behavior_logprobs, jax.lax.stop_gradient(target_logprobs), discounts,
+        rewards, jax.lax.stop_gradient(values), bootstrap_value,
+        clip_rho_threshold=clip_rho, clip_c_threshold=clip_c)
+    pg_loss = _reduce(-target_logprobs * vt.pg_advantages, reduce)
+    baseline_loss = 0.5 * _reduce(jnp.square(vt.vs - values), reduce)
+    entropy_loss = _reduce(-target_entropy, reduce)
+    total = pg_loss + baseline_cost * baseline_loss \
+        + entropy_cost * entropy_loss
+    rho = jnp.exp(jax.lax.stop_gradient(target_logprobs) - behavior_logprobs)
+    return ImpalaLossOutput(total, pg_loss, baseline_loss, entropy_loss,
+                            vt.vs.mean(), rho.mean())
+
+
+# ---------------------------------------------------------------------------
+# chunked vocab head: per-token log-prob of chosen action + entropy
+# ---------------------------------------------------------------------------
+
+def chunked_logprob_entropy(hidden, unembed, actions, *, chunk=512,
+                            final_softcap=None):
+    """hidden: (B,S,d); unembed: (d,V); actions: (B,S) int32.
+
+    Scans over S-chunks so the (B,chunk,V) logits stay transient.
+    Returns (logprob (B,S), entropy (B,S)) — both differentiable.
+    """
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    n = s // c
+    hs = hidden.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    ac = actions.reshape(b, n, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(_, xs):
+        # checkpointed: the (B,chunk,V) logits/log-softmax are recomputed in
+        # the backward pass instead of being stored for every chunk.
+        h, a = xs
+        logits = jnp.einsum("bcd,dv->bcv", h, unembed.astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+        if final_softcap:
+            logits = final_softcap * jnp.tanh(logits / final_softcap)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        alp = jnp.take_along_axis(lp, a[..., None], axis=-1)[..., 0]
+        ent = -jnp.sum(jnp.exp(lp) * lp, axis=-1)
+        return None, (alp, ent)
+
+    _, (lps, ents) = jax.lax.scan(step, None, (hs, ac))
+    return (lps.transpose(1, 0, 2).reshape(b, s),
+            ents.transpose(1, 0, 2).reshape(b, s))
+
+
+def chunked_softmax_xent(hidden, unembed, labels, *, chunk=512,
+                         final_softcap=None):
+    """Standard LM cross-entropy, chunked over S. Returns mean nats/token."""
+    lp, _ = chunked_logprob_entropy(hidden, unembed, labels, chunk=chunk,
+                                    final_softcap=final_softcap)
+    return -lp.mean()

@@ -1,0 +1,98 @@
+"""V-trace off-policy correction (IMPALA, Espeholt et al. 2018, §4.1).
+
+Faithful to DeepMind's scalable_agent/vtrace.py semantics:
+
+  rho_t  = min(rho_clip, pi(a_t|s_t) / mu(a_t|s_t))
+  c_t    = min(c_clip,  rho_t_unclipped)
+  delta_t = rho_t (r_t + gamma_t V(s_{t+1}) - V(s_t))
+  vs_t   = V(s_t) + delta_t + gamma_t c_t (vs_{t+1} - V(s_{t+1}))
+  pg_adv = rho_t (r_t + gamma_t vs_{t+1} - V(s_t))
+
+Everything is time-major (T, B), as in the paper's learner-input dict.
+The backward recursion is a reverse ``jax.lax.scan``; a Pallas TPU kernel
+of the same recursion (blocked over batch lanes) lives in
+``repro.kernels.vtrace`` and is validated against this implementation.
+
+All outputs are ``stop_gradient``-ed: V-trace targets are treated as fixed
+regression targets, exactly as in the reference implementation.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VTraceReturns(NamedTuple):
+    vs: jnp.ndarray              # (T, B) value targets
+    pg_advantages: jnp.ndarray   # (T, B) policy-gradient advantages
+
+
+def vtrace_from_importance_weights(
+        log_rhos, discounts, rewards, values, bootstrap_value,
+        *, clip_rho_threshold=1.0, clip_c_threshold=1.0,
+        clip_pg_rho_threshold=1.0):
+    """log_rhos/discounts/rewards/values: (T, B); bootstrap_value: (B,)."""
+    log_rhos = log_rhos.astype(jnp.float32)
+    discounts = discounts.astype(jnp.float32)
+    rewards = rewards.astype(jnp.float32)
+    values = values.astype(jnp.float32)
+    bootstrap_value = bootstrap_value.astype(jnp.float32)
+
+    rhos = jnp.exp(log_rhos)
+    clipped_rhos = jnp.minimum(clip_rho_threshold, rhos) \
+        if clip_rho_threshold is not None else rhos
+    cs = jnp.minimum(clip_c_threshold, rhos) \
+        if clip_c_threshold is not None else rhos
+
+    values_tp1 = jnp.concatenate(
+        [values[1:], bootstrap_value[None]], axis=0)
+    deltas = clipped_rhos * (rewards + discounts * values_tp1 - values)
+
+    def body(acc, xs):
+        delta_t, discount_t, c_t = xs
+        acc = delta_t + discount_t * c_t * acc
+        return acc, acc
+
+    _, acc = jax.lax.scan(body, jnp.zeros_like(bootstrap_value),
+                          (deltas, discounts, cs), reverse=True)
+    vs = values + acc
+
+    vs_tp1 = jnp.concatenate([vs[1:], bootstrap_value[None]], axis=0)
+    pg_rhos = jnp.minimum(clip_pg_rho_threshold, rhos) \
+        if clip_pg_rho_threshold is not None else rhos
+    pg_advantages = pg_rhos * (rewards + discounts * vs_tp1 - values)
+
+    return VTraceReturns(jax.lax.stop_gradient(vs),
+                         jax.lax.stop_gradient(pg_advantages))
+
+
+def vtrace_from_logits(behavior_logits, target_logits, actions, discounts,
+                       rewards, values, bootstrap_value, **clip_kwargs):
+    """Paper-faithful entry point: full behavior/target logits (T, B, A).
+
+    This is the exact TorchBeast learner-input contract for small action
+    spaces (Atari: A=18); LLM-vocab action spaces use
+    ``vtrace_from_logprobs`` with stored chosen-action log-probs instead
+    (DESIGN.md §2/§8).
+    """
+    behavior_lp = _action_log_probs(behavior_logits, actions)
+    target_lp = _action_log_probs(target_logits, actions)
+    return vtrace_from_importance_weights(
+        target_lp - behavior_lp, discounts, rewards, values,
+        bootstrap_value, **clip_kwargs)
+
+
+def vtrace_from_logprobs(behavior_logprobs, target_logprobs, discounts,
+                         rewards, values, bootstrap_value, **clip_kwargs):
+    """LLM-scale entry point: (T, B) chosen-action log-probs."""
+    return vtrace_from_importance_weights(
+        target_logprobs - behavior_logprobs, discounts, rewards, values,
+        bootstrap_value, **clip_kwargs)
+
+
+def _action_log_probs(logits, actions):
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(lp, actions[..., None], axis=-1)[..., 0]

@@ -1,0 +1,1 @@
+from repro.data.synthetic import PackedBatchIterator, markov_corpus, rl_episode_batch  # noqa: F401

@@ -1,0 +1,94 @@
+"""Synthetic token data pipeline (no external datasets in the container).
+
+Provides deterministic, seedable streams for the LM/RL drivers:
+
+* ``markov_corpus`` — tokens from a random sparse Markov chain (low-entropy,
+  so LM training loss visibly decreases; used by examples and tests).
+* ``PackedBatchIterator`` — documents packed into fixed (B, S+1) batches
+  with host-side prefetch, the shape consumed by the learner steps.
+* ``rl_episode_batch`` — token-MDP episode batches with behavior log-probs,
+  rewards and dones (the LLM-IMPALA learner-queue format).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+def markov_corpus(vocab_size: int, length: int, seed: int = 0,
+                  branching: int = 4) -> np.ndarray:
+    """Random sparse Markov chain: each token has ``branching`` successors."""
+    rng = np.random.default_rng(seed)
+    succ = rng.integers(0, vocab_size, size=(vocab_size, branching))
+    probs = rng.dirichlet(np.ones(branching), size=vocab_size)
+    out = np.empty(length, np.int32)
+    tok = int(rng.integers(vocab_size))
+    for i in range(length):
+        out[i] = tok
+        tok = int(succ[tok, rng.choice(branching, p=probs[tok])])
+    return out
+
+
+class PackedBatchIterator:
+    """Yields {"tokens": (B, S+1) int32} batches from a corpus, with a
+    background prefetch thread (the host data-pipeline substrate)."""
+
+    def __init__(self, corpus: np.ndarray, batch_size: int, seq_len: int,
+                 seed: int = 0, prefetch: int = 4):
+        self.corpus = np.asarray(corpus, np.int32)
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.rng = np.random.default_rng(seed)
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _sample(self):
+        n = len(self.corpus) - self.seq_len - 1
+        starts = self.rng.integers(0, n, size=self.batch_size)
+        toks = np.stack([self.corpus[s:s + self.seq_len + 1]
+                         for s in starts])
+        return {"tokens": toks}
+
+    def _fill(self):
+        while not self._stop.is_set():
+            try:
+                self._q.put(self._sample(), timeout=0.5)
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def rl_episode_batch(rng: np.random.Generator, batch_size: int, seq_len: int,
+                     vocab_size: int, a: int = 5, b: int = 3) -> dict:
+    """Random-behavior token-MDP episodes in the LLM-IMPALA batch layout
+    (used to bootstrap training and for shape tests; the real driver
+    generates these with the serving path)."""
+    tokens = rng.integers(0, vocab_size,
+                          size=(batch_size, seq_len + 1)).astype(np.int32)
+    target = (a * tokens[:, :-1] + b) % vocab_size
+    rewards = (tokens[:, 1:] == target).astype(np.float32)
+    done = np.zeros((batch_size, seq_len), bool)
+    done[:, -1] = True
+    behavior_logprob = np.full((batch_size, seq_len),
+                               -np.log(vocab_size), np.float32)
+    return {"tokens": tokens, "behavior_logprob": behavior_logprob,
+            "reward": rewards, "done": done}

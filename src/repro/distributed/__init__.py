@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (EXPERT_RULES, FSDP_RULES,  # noqa: F401
+                                        MEGATRON_RULES, RULE_SETS,
+                                        SEQPAR_RULES, constrain,
+                                        param_shardings, spec_for, use_rules,
+                                        zero1_shardings)

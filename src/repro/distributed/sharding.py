@@ -1,0 +1,265 @@
+"""Logical-axis sharding (MaxText-style rules tables).
+
+Every parameter carries logical axis names from init (models/common.param);
+a *rules* dict maps logical -> mesh axes. Swapping rules is how the perf
+hillclimb changes sharding without touching model code.
+
+Activation constraints: model code calls ``constrain(x, logical_axes)``
+which applies ``jax.lax.with_sharding_constraint`` when a (mesh, rules)
+context is active, and is a no-op otherwise (CPU tests).
+
+Rule sets provided:
+  MEGATRON_RULES   — baseline: params over "model", batch over data axes,
+                     optimizer state sharded like params.
+  FSDP_RULES       — adds weight sharding over the data axes ("embed"->data)
+  SEQPAR_RULES     — megatron + sequence-parallel residual stream
+  EXPERT_RULES     — expert-parallel MoE (experts over "model")
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+# "batch" below expands to all data-like mesh axes present (pod+data).
+MEGATRON_RULES: Dict[str, object] = {
+    "vocab": "model",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ssm_heads": "model",
+    "conv_ch": "model",
+    "act_batch": "batch",
+    "act_seq": None,
+    "act_embed": None,
+    "act_vocab": "model",
+    "expert": None,
+}
+
+FSDP_RULES = dict(MEGATRON_RULES, embed="batch")
+SEQPAR_RULES = dict(MEGATRON_RULES, act_seq="model")
+EXPERT_RULES = dict(MEGATRON_RULES, expert="model", mlp=None,
+                    act_expert="model")
+
+FSDP_SEQPAR_RULES = dict(MEGATRON_RULES, embed="batch", act_seq="model")
+# context-parallel attention: keep q seq-sharded through attention instead
+# of resharding to head-sharded each layer (saves the per-layer q
+# all-gather when the residual stream is sequence-parallel) — §Perf H1.
+CP_FSDP_SEQPAR_RULES = dict(FSDP_SEQPAR_RULES, attn_pref="seq")
+EXPERT_SEQPAR_RULES = dict(SEQPAR_RULES, expert="model", mlp=None)
+
+RULE_SETS = {
+    "megatron": MEGATRON_RULES,
+    "fsdp": FSDP_RULES,
+    "seqpar": SEQPAR_RULES,
+    "fsdp_seqpar": FSDP_SEQPAR_RULES,
+    "cp_fsdp_seqpar": CP_FSDP_SEQPAR_RULES,
+    "expert": EXPERT_RULES,
+    "expert_seqpar": EXPERT_SEQPAR_RULES,
+}
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All batch-like axes of the mesh ('pod' + 'data' when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data", "fsdp"))
+
+
+def _resolve(rule, mesh: Mesh):
+    if rule == "batch":
+        axes = data_axes(mesh)
+        return axes if len(axes) > 1 else (axes[0] if axes else None)
+    return rule
+
+
+def spec_for(logical_axes: Sequence[str], mesh: Mesh, rules: Dict,
+             shape: Optional[Sequence[int]] = None,
+             fallback_model: bool = False) -> P:
+    """Map logical axes -> PartitionSpec, dropping non-divisible mappings.
+
+    If ``shape`` is given, any mapping whose dimension is not divisible by
+    the mesh-axis size is dropped (replicated) — this keeps one rules table
+    valid across heterogeneous archs (e.g. kv_heads=8 on a 16-way model
+    axis simply replicates).
+
+    ``fallback_model``: if after the main pass the 'model' axis is unused
+    (e.g. heads=56 on a 16-way axis), shard the largest still-replicated,
+    divisible dimension over 'model' instead — parameters must never be
+    fully replicated on the model axis (deepseek-coder's 56 heads would
+    otherwise replicate the whole attention block).
+    """
+    used = set()
+    parts = []
+    for i, ax in enumerate(logical_axes):
+        rule = _resolve(rules.get(ax), mesh)
+        if rule is None:
+            parts.append(None)
+            continue
+        mesh_axes = rule if isinstance(rule, tuple) else (rule,)
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        if not mesh_axes:
+            parts.append(None)
+            continue
+        size = 1
+        for a in mesh_axes:
+            size *= mesh.shape[a]
+        if shape is not None and shape[i] % size != 0:
+            parts.append(None)
+            continue
+        used.update(mesh_axes)
+        parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    if (fallback_model and "model" not in used and shape is not None
+            and "model" in mesh.shape):
+        msize = mesh.shape["model"]
+        cands = sorted(range(len(parts)), key=lambda i: -shape[i])
+        for i in cands:
+            if parts[i] is None and shape[i] % msize == 0 \
+                    and shape[i] >= msize:
+                parts[i] = "model"
+                break
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(axes_tree, mesh: Mesh, rules: Dict, shapes_tree=None):
+    """Tree of NamedSharding for a params tree (axes_tree from init)."""
+    is_axes = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+        isinstance(a, str) for a in x)
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda ax: NamedSharding(mesh, spec_for(ax, mesh, rules)),
+            axes_tree, is_leaf=is_axes)
+    return jax.tree.map(
+        lambda ax, sh: NamedSharding(
+            mesh, spec_for(ax, mesh, rules, sh.shape,
+                           fallback_model=len(sh.shape) > 1)),
+        axes_tree, shapes_tree, is_leaf=is_axes)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Dict):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current_rules():
+    return getattr(_ctx, "state", None)
+
+
+def constrain(x, logical_axes: Sequence[str]):
+    """Apply a sharding constraint if a (mesh, rules) context is active."""
+    state = current_rules()
+    if state is None:
+        return x
+    mesh, rules = state
+    spec = spec_for(logical_axes, mesh, rules, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def gather_seq(x):
+    """Pin the sequence-parallel -> sequence-replicated reshard to THIS
+    (bf16) tensor. Without it XLA gathers the fp32 norm intermediate —
+    2x the wire bytes (EXPERIMENTS.md §Perf H1 iter-3). No-op unless the
+    active rules shard act_seq."""
+    state = current_rules()
+    if state is None:
+        return x
+    mesh, rules = state
+    if rules.get("act_seq") is None:
+        return x
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    parts = [None] * x.ndim
+    if daxes and x.shape[0] % dsize == 0:
+        parts[0] = daxes if len(daxes) > 1 else daxes[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def constrain_attention(x, *, seq_dim=1, head_dim=2, batch_dim=0):
+    """Sharding constraint for attention intermediates (q / expanded kv /
+    outputs), shaped (B, S, H, hd).
+
+    Batch always goes to the data axes. The model axis goes to HEADS when
+    divisible (Megatron attention), else to the QUERY SEQUENCE (context-
+    parallel fallback — required for e.g. deepseek-coder's 56 heads on a
+    16-way axis, where neither H nor K divides). Without this constraint
+    the GSPMD cost model has been observed to replicate the whole (B,H,S,S)
+    score tensor (EXPERIMENTS.md §Perf).
+    """
+    state = current_rules()
+    if state is None:
+        return x
+    mesh, rules = state
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    parts = [None] * x.ndim
+    if daxes and x.shape[batch_dim] % dsize == 0:
+        parts[batch_dim] = daxes if len(daxes) > 1 else daxes[0]
+    if "model" in mesh.shape:
+        msize = mesh.shape["model"]
+        prefer_seq = rules.get("attn_pref") == "seq"
+        seq_ok = (seq_dim >= 0 and x.shape[seq_dim] % msize == 0
+                  and x.shape[seq_dim] >= msize)
+        if prefer_seq and seq_ok:
+            parts[seq_dim] = "model"
+        elif x.shape[head_dim] % msize == 0:
+            parts[head_dim] = "model"
+        elif seq_ok:
+            parts[seq_dim] = "model"
+    while parts and parts[-1] is None:
+        parts.pop()
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: shard optimizer state over the data axes on top of param sharding
+# ---------------------------------------------------------------------------
+
+def zero1_shardings(axes_tree, shapes_tree, mesh: Mesh, rules: Dict):
+    """Optimizer-state shardings: like params, but each leaf additionally
+    shards its first still-replicated, divisible dimension over the data
+    axes (ZeRO-1). Falls back to the param sharding when nothing divides."""
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    spec_daxes = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    is_axes = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+        isinstance(a, str) for a in x)
+
+    def one(ax, sh):
+        base = spec_for(ax, mesh, rules, sh.shape,
+                        fallback_model=len(sh.shape) > 1)
+        parts = list(base) + [None] * (len(sh.shape) - len(base))
+        used = set()
+        for p in parts:
+            for a in (p if isinstance(p, tuple) else (p,)):
+                if a is not None:
+                    used.add(a)
+        if spec_daxes is not None and not used.intersection(daxes):
+            for i, p in enumerate(parts):
+                if p is None and sh.shape[i] % dsize == 0 and sh.shape[i] >= dsize:
+                    parts[i] = spec_daxes
+                    break
+        while parts and parts[-1] is None:
+            parts.pop()
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes)

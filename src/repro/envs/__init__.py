@@ -1,0 +1,1 @@
+from repro.envs import base, catch, gridworld, token_mdp  # noqa: F401

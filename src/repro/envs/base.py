@@ -1,0 +1,72 @@
+"""Functional environment interface (pure JAX, vmap/scan-able).
+
+An Env is a pair of pure functions:
+  reset(key)                 -> (state, obs)
+  step(state, action, key)   -> (state, obs, reward, done)
+
+Auto-reset semantics: when an episode ends, ``step`` returns done=True and
+the obs of the freshly reset episode (standard vectorised-RL convention, and
+what IMPALA's end-of-life episode definition needs).
+
+Host-loop (MonoBeast-style) code wraps these with ``HostEnv`` which holds
+state imperatively and matches the OpenAI Gym step/reset API used by
+TorchBeast's polybeast_env.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Env(NamedTuple):
+    reset: Callable[[Any], Tuple[Any, jnp.ndarray]]
+    step: Callable[[Any, jnp.ndarray, Any], Tuple[Any, jnp.ndarray,
+                                                  jnp.ndarray, jnp.ndarray]]
+    num_actions: int
+    obs_shape: Tuple[int, ...]
+
+
+def auto_reset(env_reset, env_step):
+    """Wrap a (reset, step) pair so that done -> fresh episode obs/state."""
+    def step(state, action, key):
+        k1, k2 = jax.random.split(key)
+        new_state, obs, reward, done = env_step(state, action, k1)
+        reset_state, reset_obs = env_reset(k2)
+        state = jax.tree.map(lambda a, b: jnp.where(done, b, a),
+                             new_state, reset_state)
+        obs = jnp.where(done, reset_obs, obs)
+        return state, obs, reward, done
+    return step
+
+
+class HostEnv:
+    """Imperative Gym-like wrapper over a functional Env (one episode stream).
+
+    This is the object served by the paper's environment servers; here it
+    backs the MonoBeast-style host actor loop.
+    """
+
+    def __init__(self, env: Env, seed: int = 0):
+        self._env = env
+        self._key = jax.random.PRNGKey(seed)
+        self._state = None
+        self._step = jax.jit(env.step)
+        self._reset = jax.jit(env.reset)
+
+    @property
+    def num_actions(self):
+        return self._env.num_actions
+
+    def reset(self):
+        self._key, k = jax.random.split(self._key)
+        self._state, obs = self._reset(k)
+        return jax.device_get(obs)
+
+    def step(self, action):
+        self._key, k = jax.random.split(self._key)
+        self._state, obs, reward, done = self._step(
+            self._state, jnp.asarray(action), k)
+        return (jax.device_get(obs), float(reward), bool(done), {})

@@ -1,0 +1,54 @@
+"""Catch (bsuite-style): a ball falls down a ROWSxCOLS board; the paddle on
+the bottom row moves left/stay/right. Reward +1 on catch, -1 on miss, at the
+final row only. Observation: (ROWS, COLS, 1) float32 with ball and paddle
+pixels set to 1.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, auto_reset
+
+ROWS, COLS = 10, 5
+NUM_ACTIONS = 3
+
+
+class CatchState(NamedTuple):
+    ball_x: jnp.ndarray
+    ball_y: jnp.ndarray
+    paddle_x: jnp.ndarray
+
+
+def _obs(state):
+    board = jnp.zeros((ROWS, COLS), jnp.float32)
+    board = board.at[state.ball_y, state.ball_x].set(1.0)
+    board = board.at[ROWS - 1, state.paddle_x].set(1.0)
+    return board[..., None]
+
+
+def _reset(key):
+    ball_x = jax.random.randint(key, (), 0, COLS)
+    state = CatchState(ball_x, jnp.zeros((), jnp.int32),
+                       jnp.asarray(COLS // 2, jnp.int32))
+    return state, _obs(state)
+
+
+def _step(state, action, key):
+    del key
+    dx = action - 1  # 0,1,2 -> -1,0,1
+    paddle_x = jnp.clip(state.paddle_x + dx, 0, COLS - 1)
+    ball_y = state.ball_y + 1
+    state = CatchState(state.ball_x, ball_y, paddle_x)
+    done = ball_y == ROWS - 1
+    reward = jnp.where(
+        done, jnp.where(state.ball_x == paddle_x, 1.0, -1.0), 0.0)
+    return state, _obs(state), reward.astype(jnp.float32), done
+
+
+def make() -> Env:
+    return Env(reset=_reset, step=auto_reset(_reset, _step),
+               num_actions=NUM_ACTIONS, obs_shape=(ROWS, COLS, 1))

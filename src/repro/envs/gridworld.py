@@ -1,0 +1,74 @@
+"""MinAtar-style 10x10 grid collection game (the paper's canonical
+adaptation target — Figs. 1-2 swap PolyBeast onto MinAtar).
+
+The agent (5 actions: noop/up/down/left/right) collects food (+1) and must
+avoid a hazard (-1, ends episode). Episode also ends after MAX_STEPS.
+Observation: (10, 10, 4) float32 channels [agent, food, hazard, time-left].
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, auto_reset
+
+SIZE = 10
+NUM_ACTIONS = 5
+NUM_FOOD = 3
+MAX_STEPS = 100
+
+_MOVES = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
+
+
+class GridState(NamedTuple):
+    agent: jnp.ndarray      # (2,) int32
+    food: jnp.ndarray       # (NUM_FOOD, 2) int32
+    food_alive: jnp.ndarray  # (NUM_FOOD,) bool
+    hazard: jnp.ndarray     # (2,) int32
+    t: jnp.ndarray          # () int32
+
+
+def _obs(state):
+    board = jnp.zeros((SIZE, SIZE, 4), jnp.float32)
+    board = board.at[state.agent[0], state.agent[1], 0].set(1.0)
+    for i in range(NUM_FOOD):
+        board = board.at[state.food[i, 0], state.food[i, 1], 1].set(
+            state.food_alive[i].astype(jnp.float32))
+    board = board.at[state.hazard[0], state.hazard[1], 2].set(1.0)
+    board = board.at[:, :, 3].set(1.0 - state.t / MAX_STEPS)
+    return board
+
+
+def _reset(key):
+    ks = jax.random.split(key, 3)
+    agent = jax.random.randint(ks[0], (2,), 0, SIZE)
+    food = jax.random.randint(ks[1], (NUM_FOOD, 2), 0, SIZE)
+    hazard = jax.random.randint(ks[2], (2,), 0, SIZE)
+    state = GridState(agent, food, jnp.ones((NUM_FOOD,), bool), hazard,
+                      jnp.zeros((), jnp.int32))
+    return state, _obs(state)
+
+
+def _step(state, action, key):
+    agent = jnp.clip(state.agent + _MOVES[action], 0, SIZE - 1)
+    on_food = (state.food == agent[None]).all(-1) & state.food_alive
+    reward = on_food.sum().astype(jnp.float32)
+    food_alive = state.food_alive & ~on_food
+    # collected food respawns
+    new_food = jax.random.randint(key, (NUM_FOOD, 2), 0, SIZE)
+    food = jnp.where(on_food[:, None], new_food, state.food)
+    food_alive = food_alive | on_food
+    on_hazard = (agent == state.hazard).all()
+    reward = reward - on_hazard.astype(jnp.float32)
+    t = state.t + 1
+    done = on_hazard | (t >= MAX_STEPS)
+    state = GridState(agent, food, food_alive, state.hazard, t)
+    return state, _obs(state), reward, done
+
+
+def make() -> Env:
+    return Env(reset=_reset, step=auto_reset(_reset, _step),
+               num_actions=NUM_ACTIONS, obs_shape=(SIZE, SIZE, 4))

@@ -1,0 +1,50 @@
+"""Token-MDP: a dense-reward sequence-generation environment for LLM-policy
+IMPALA (the RL-finetuning setting of DESIGN.md §2).
+
+State is the current token. The environment rewards emitting the token
+``(a * prev + b) mod V`` (a hidden affine chain): +1 for the correct next
+token, 0 otherwise. Episodes last EP_LEN steps. A policy must learn the
+prev->next mapping — learnable from scratch by a small decoder, and a
+shape-compatible stand-in for reward-model-scored generation.
+
+Observation = current token id (the driver feeds the *sequence so far* to
+the transformer; the env itself is Markov in the last token).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, auto_reset
+
+EP_LEN = 32
+
+
+class TokenState(NamedTuple):
+    token: jnp.ndarray  # () int32
+    t: jnp.ndarray      # () int32
+
+
+def make(vocab_size: int, a: int = 5, b: int = 3, ep_len: int = EP_LEN) -> Env:
+    def _obs(state):
+        return state.token
+
+    def _reset(key):
+        token = jax.random.randint(key, (), 0, vocab_size)
+        state = TokenState(token, jnp.zeros((), jnp.int32))
+        return state, _obs(state)
+
+    def _step(state, action, key):
+        del key
+        target = (a * state.token + b) % vocab_size
+        reward = (action == target).astype(jnp.float32)
+        t = state.t + 1
+        done = t >= ep_len
+        state = TokenState(action.astype(jnp.int32), t)
+        return state, _obs(state), reward, done
+
+    return Env(reset=_reset, step=auto_reset(_reset, _step),
+               num_actions=vocab_size, obs_shape=())

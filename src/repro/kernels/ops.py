@@ -1,0 +1,81 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (validation mode) and False on TPU —
+the kernels are written for the TPU target; interpret mode executes the
+kernel body for correctness checking in this container (DESIGN.md §8.5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_chunk as _ssd
+from repro.kernels import vtrace as _vt
+
+
+def _default_interpret():
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, scale=None, causal=True, window=0,
+                    softcap=0.0, block_q=128, block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fa.flash_attention(q, k, v, scale=scale, causal=causal,
+                               window=window, softcap=softcap,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+def decode_attention(q, k, v, slot_pos, pos, *, scale=None, softcap=0.0,
+                     window=0, block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _dec.decode_attention(q, k, v, slot_pos, pos, scale=scale,
+                                 softcap=softcap, window=window,
+                                 block_k=block_k, interpret=interpret)
+
+
+def vtrace_acc(deltas, dcs, *, block_b=128, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _vt.vtrace_scan(deltas, dcs, block_b=block_b,
+                           interpret=interpret)
+
+
+def vtrace_from_importance_weights_kernel(
+        log_rhos, discounts, rewards, values, bootstrap_value, *,
+        clip_rho_threshold=1.0, clip_c_threshold=1.0,
+        clip_pg_rho_threshold=1.0, interpret=None):
+    """Full V-trace with the recursion on the Pallas kernel (drop-in for
+    core.vtrace.vtrace_from_importance_weights)."""
+    from repro.core.vtrace import VTraceReturns
+
+    log_rhos = log_rhos.astype(jnp.float32)
+    discounts = discounts.astype(jnp.float32)
+    rewards = rewards.astype(jnp.float32)
+    values = values.astype(jnp.float32)
+    bootstrap_value = bootstrap_value.astype(jnp.float32)
+
+    rhos = jnp.exp(log_rhos)
+    clipped_rhos = jnp.minimum(clip_rho_threshold, rhos)
+    cs = jnp.minimum(clip_c_threshold, rhos)
+    values_tp1 = jnp.concatenate([values[1:], bootstrap_value[None]], 0)
+    deltas = clipped_rhos * (rewards + discounts * values_tp1 - values)
+
+    acc = vtrace_acc(deltas, discounts * cs, interpret=interpret)
+    vs = values + acc
+    vs_tp1 = jnp.concatenate([vs[1:], bootstrap_value[None]], 0)
+    pg_rhos = jnp.minimum(clip_pg_rho_threshold, rhos)
+    pg_adv = pg_rhos * (rewards + discounts * vs_tp1 - values)
+    return VTraceReturns(jax.lax.stop_gradient(vs),
+                         jax.lax.stop_gradient(pg_adv))
+
+
+def ssd_chunk(c, b, xdt, da, h_prev, *, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ssd.ssd_chunk(c, b, xdt, da, h_prev, interpret=interpret)

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def ref_flash_attention(q, k, v, *, scale=None, causal=True, window=0,
+                        softcap=0.0):
+    """q: (B,H,S,hd); k,v: (B,K,S,hd). Dense-softmax reference."""
+    b, h, s, hd = q.shape
+    kheads = k.shape[1]
+    group = h // kheads
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(b, kheads, group, s, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bkgqh,bkth->bkgqt", qg, kf) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqt,bkth->bkgqh", p, vf)
+    return o.reshape(b, h, s, hd).astype(q.dtype)
+
+
+def ref_decode_attention(q, k, v, slot_pos, pos, *, scale=None, softcap=0.0,
+                         window=0):
+    """q: (B,H,hd); k,v: (B,K,S,hd); slot_pos (S,); pos scalar."""
+    b, h, hd = q.shape
+    kheads, s = k.shape[1], k.shape[2]
+    group = h // kheads
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(b, kheads, group, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgh,bkth->bkgt", qg, k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window:
+        valid &= pos - slot_pos < window
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgt,bkth->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(q.dtype)
+
+
+def ref_vtrace_scan(deltas, dcs):
+    """Reverse first-order recurrence via lax.scan (matches core.vtrace)."""
+    def body(acc, xs):
+        d, dc = xs
+        acc = d + dc * acc
+        return acc, acc
+
+    _, acc = jax.lax.scan(body, jnp.zeros_like(deltas[0]),
+                          (deltas.astype(jnp.float32),
+                           dcs.astype(jnp.float32)), reverse=True)
+    return acc
+
+
+def ref_ssd_chunk(c, b, xdt, da, h_prev):
+    """Oracle for kernels/ssd_chunk.py — mirrors models/mamba.py chunk_step
+    for a single (batch*head) slice set. Shapes as in ssd_chunk."""
+    c = c.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    x = xdt.astype(jnp.float32)
+    da = da.astype(jnp.float32)[..., 0]          # (BH, L)
+    h = h_prev.astype(jnp.float32)
+    acs = jnp.cumsum(da, axis=-1)                # (BH, L)
+    seg = acs[:, :, None] - acs[:, None, :]
+    l = c.shape[1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    lmat = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("gln,gsn->gls", c, b) * lmat
+    y = jnp.einsum("gls,gsp->glp", scores, x)
+    y = y + jnp.einsum("gln,gpn->glp", c, h) * jnp.exp(acs)[..., None]
+    w = jnp.exp(acs[:, -1:] - acs)               # (BH, L)
+    h_new = h * jnp.exp(acs[:, -1])[:, None, None] + \
+        jnp.einsum("glp,gln,gl->gpn", x, b, w)
+    return y.astype(xdt.dtype), h_new

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) program on
+the production meshes and extract memory / cost / collective statistics.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count on first backend initialisation, and the dry-run needs 512
+host placeholder devices. (Only the dry-run — tests and benchmarks see the
+real single CPU device.)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --all                 # 40 pairs, single-pod
+  python -m repro.launch.dryrun --all --multi-pod     # 40 pairs, 512 chips
+  python -m repro.launch.dryrun --all --rules fsdp    # alternative sharding
+
+Default --rules auto picks per (arch, shape): expert(_seqpar) when the
+expert count divides the model axis, fsdp(_seqpar) for >=8B train /
+>=60B serve, seqpar for other train shapes, megatron otherwise —
+the measured rationale is EXPERIMENTS.md §Perf.
+
+Each run writes <out>/<arch>__<shape>__<mesh>__<rules>.json with
+bytes-per-device, trip-count-corrected per-device FLOPs/bytes,
+per-collective byte counts, and the roofline terms (EXPERIMENTS.md
+§Dry-run / §Roofline). Recorded sweeps live in
+experiments/dryrun_baseline/ and experiments/dryrun_optimized/.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS
+from repro.configs.base import INPUT_SHAPES
+from repro.distributed.sharding import RULE_SETS
+from repro.launch import mesh as mesh_lib
+from repro.launch.specs import build_program
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred|c64|c128)\[([\d,]*)\]")
+
+# bytes-on-the-wire multiplier per output byte (ring algorithms)
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum per-device collective bytes from optimized (SPMD) HLO text."""
+    per_op = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        out_sig, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(out_sig):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        per_op[op] = per_op.get(op, 0) + nbytes * _COLL_FACTOR[op]
+    return per_op
+
+
+def model_flops(cfg, shape, chips: int) -> float:
+    """Useful-compute estimate (global): 6·N·D train, 2·N·D inference.
+    MoE uses active params (top-k experts)."""
+    n = cfg.param_count()
+    if cfg.num_experts:
+        inactive = cfg.num_groups * len(cfg.block_pattern) * \
+            (cfg.num_experts - cfg.num_experts_per_tok) * \
+            3 * cfg.d_model * cfg.moe_d_ff
+        n -= inactive
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def resolve_rules(rules_name: str, shape_name: str, arch: str) -> str:
+    """'auto' baseline rules (EXPERIMENTS.md §Perf entry 0):
+      train: seq-parallel residuals (required to fit saved scan carries);
+             + FSDP weights for >=8B models (weights/grads/opt do not fit
+             a 16-way model axis alone).
+      serve: megatron-2D; FSDP for >=60B (llama-90b weights alone exceed
+             HBM on the model axis)."""
+    if rules_name != "auto":
+        return rules_name
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    # expert parallelism when the expert count divides the model axis
+    # (granite: 32 experts / 16; mixtral's 8 does not divide — megatron):
+    # §Perf H2 — 6x collective reduction, removes replicated expert compute.
+    ep = cfg.num_experts and cfg.num_experts % 16 == 0
+    if INPUT_SHAPES[shape_name].kind == "train":
+        if ep:
+            return "expert_seqpar"
+        return "fsdp_seqpar" if n >= 8e9 else "seqpar"
+    if ep:
+        return "expert"
+    return "fsdp" if n >= 60e9 else "megatron"
+
+
+def _analyze(compiled):
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = collective_bytes(compiled.as_text())
+    return mem, float(ca.get("flops", 0.0)), \
+        float(ca.get("bytes accessed", 0.0)), coll
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, rules_name: str,
+            out_dir: str, verbose: bool = True, with_block: bool = True):
+    from repro.launch.roofline import (build_block_program,
+                                       inner_scan_corrections)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    rules_name = resolve_rules(rules_name, shape_name, arch)
+    rules = RULE_SETS[rules_name]
+    shape = INPUT_SHAPES[shape_name]
+    chips = mesh.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+
+    t0 = time.time()
+    step_fn, args, cfg, jit_kwargs = build_program(arch, shape_name, mesh,
+                                                   rules)
+    with mesh:
+        lowered = jax.jit(step_fn, **jit_kwargs).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem, flops_dev, bytes_dev, coll = _analyze(compiled)
+    coll_total = sum(coll.values())
+
+    # ---- trip-count correction: + (G-1) x one-scan-body program ----
+    block = {"flops_per_device": 0.0, "bytes_per_device": 0.0,
+             "collective_bytes": 0.0}
+    if with_block:
+        bfn, bargs = build_block_program(cfg, shape_name, mesh, rules)
+        with mesh:
+            bcompiled = jax.jit(bfn).lower(*bargs).compile()
+        _, bflops, bbytes, bcoll = _analyze(bcompiled)
+        block = {"flops_per_device": bflops, "bytes_per_device": bbytes,
+                 "collective_bytes": sum(bcoll.values())}
+    g1 = cfg.num_groups - 1
+    corr = inner_scan_corrections(cfg, shape_name, chips)
+    corr_flops_dev = sum(corr.values()) / chips
+
+    flops_dev_c = flops_dev + g1 * block["flops_per_device"] + corr_flops_dev
+    bytes_dev_c = bytes_dev + g1 * block["bytes_per_device"]
+    coll_total_c = coll_total + g1 * block["collective_bytes"]
+
+    mflops = model_flops(cfg, shape, chips)
+    compute_t = flops_dev_c / mesh_lib.PEAK_FLOPS_BF16
+    memory_t = bytes_dev_c / mesh_lib.HBM_BW
+    coll_t = coll_total_c / mesh_lib.ICI_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    bottleneck = max(terms, key=terms.get)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "rules": rules_name, "chips": chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_total": (mem.argument_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 - mem.alias_size_in_bytes),
+        },
+        "cost_raw": {"flops_per_device": flops_dev,
+                     "bytes_per_device": bytes_dev,
+                     "collective_bytes_per_device": coll_total},
+        "cost_block": block,
+        "inner_scan_corrections_global_flops": corr,
+        "cost_corrected": {"flops_per_device": flops_dev_c,
+                           "bytes_per_device": bytes_dev_c,
+                           "collective_bytes_per_device": coll_total_c},
+        "collectives": coll,
+        "roofline": {
+            **{k: round(v, 6) for k, v in terms.items()},
+            "bottleneck": bottleneck,
+            "model_flops_global": mflops,
+            "hlo_flops_global": flops_dev_c * chips,
+            "useful_ratio": (mflops / (flops_dev_c * chips)
+                             if flops_dev_c else 0.0),
+        },
+        "params": cfg.param_count(),
+    }
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_name}__{rules_name}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1)
+
+    if verbose:
+        hbm_frac = result["memory"]["per_device_total"] / mesh_lib.HBM_BYTES
+        print(f"[{arch} | {shape_name} | {mesh_name} | {rules_name}] "
+              f"compile={t_compile:.0f}s "
+              f"mem/dev={result['memory']['per_device_total']/2**30:.2f}GiB "
+              f"({hbm_frac*100:.0f}% HBM) "
+              f"flops/dev={flops_dev_c:.3g} coll/dev={coll_total_c:.3g}B "
+              f"bottleneck={bottleneck} "
+              f"useful={result['roofline']['useful_ratio']:.2f}",
+              flush=True)
+        print("  memory_analysis:", mem, flush=True)
+        print("  cost_analysis (corrected): flops=%.4g bytes=%.4g" %
+              (flops_dev_c, bytes_dev_c), flush=True)
+    return result
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=list(ARCHS), default=None)
+    p.add_argument("--shape", choices=list(INPUT_SHAPES), default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--rules", choices=["auto"] + list(RULE_SETS),
+                   default="auto")
+    p.add_argument("--out", default="experiments/dryrun")
+    args = p.parse_args(argv)
+
+    pairs = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in INPUT_SHAPES:
+                pairs.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs.append((args.arch, args.shape))
+
+    failures = []
+    for arch, shape in pairs:
+        try:
+            run_one(arch, shape, multi_pod=args.multi_pod,
+                    rules_name=args.rules, out_dir=args.out)
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape, repr(e)))
+            print(f"[{arch} | {shape}] FAILED: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print(f"\nall {len(pairs)} dry-runs compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production mesh construction (TPU v5e target).
+
+Single pod: 256 chips as (16, 16) ("data", "model").
+Multi-pod:  2 pods x 256 chips as (2, 16, 16) ("pod", "data", "model") —
+the "pod" axis is an additional data axis; gradient all-reduce crosses the
+inter-pod links once per step (DESIGN.md §7).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before any device query).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1-D 'data' mesh (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+# Hardware constants for the roofline model (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per chip per direction)
+HBM_BYTES = 16 * 1024**3      # 16 GiB per chip
+VMEM_BYTES = 128 * 1024**2    # ~128 MiB vector memory (v5e)

@@ -1,0 +1,259 @@
+"""Program + input-spec builders for the dry-run and launchers.
+
+For every (arch, input-shape) pair this module builds:
+  * the step function to lower (train_step / prefill_step / serve_step),
+  * ShapeDtypeStruct stand-ins for every input, with NamedShardings attached
+    (weak-type-correct, shardable, zero allocation),
+so ``jax.jit(step).lower(**specs).compile()`` proves the distribution
+config end-to-end (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                TrainConfig)
+from repro.core import learner as learner_lib
+from repro.distributed import sharding as shd
+from repro.models import model as model_lib
+from repro.models.common import split_params
+from repro.optim import make_optimizer
+
+# archs whose exact config is pure full attention: long_500k runs only with
+# the flag-gated sliding-window serving variant (DESIGN.md §5).
+LONG_CONTEXT_OVERRIDE = {
+    "qwen3-32b", "qwen3-4b", "deepseek-coder-33b", "musicgen-large",
+    "llama-3.2-vision-90b",
+}
+
+
+def _shape(shape) :
+    return shape if isinstance(shape, InputShape) else INPUT_SHAPES[shape]
+
+
+def resolve_config(arch: str, shape_name, base_cfg=None) -> ModelConfig:
+    """Arch config, specialised to the input shape where required.
+    ``shape_name`` may be a name or an InputShape; ``base_cfg`` overrides the
+    registry lookup (reduced-config integration tests)."""
+    shape = _shape(shape_name)
+    shape_name = shape.name
+    cfg = base_cfg if base_cfg is not None else get_config(arch)
+    if shape_name == "long_500k" and arch in LONG_CONTEXT_OVERRIDE:
+        pattern = tuple(("swa_attn" if m == "attn" else m, f)
+                        for m, f in cfg.block_pattern)
+        cfg = dataclasses.replace(cfg, block_pattern=pattern,
+                                  sliding_window=cfg.long_context_window)
+    kind = shape.kind
+    if kind == "train":
+        # bound the (b,H,L,L) SSD decay-matrix recompute in backward
+        cfg = dataclasses.replace(cfg, ssm_chunk=min(cfg.ssm_chunk, 128))
+    # memory-bounded chunked online-softmax attention everywhere: the
+    # backward pass re-runs each query-chunk's inner loop (q_step is
+    # checkpointed), so no (S,S) scores or per-iteration softmax residuals
+    # are ever resident. FLOPs hidden inside the chunk loops are restored
+    # by roofline.inner_scan_corrections.
+    cfg = dataclasses.replace(cfg, attn_impl="xla_chunked")
+    return cfg
+
+
+def abstract_params(cfg: ModelConfig, mesh, rules):
+    """(param ShapeDtypeStructs with shardings, axes tree)."""
+    box = {}
+
+    def f():
+        vals, axes = split_params(
+            model_lib.model_init(jax.random.PRNGKey(0), cfg))
+        box["axes"] = axes  # strings: captured at trace time, not returned
+        return vals
+
+    shapes = jax.eval_shape(f)
+    axes = box["axes"]
+    shardings = shd.param_shardings(axes, mesh, rules, shapes)
+    specs = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+    return specs, axes
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _batch_spec(mesh, batch: int):
+    """Shard the batch dim over all data-like axes when divisible."""
+    axes = shd.data_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if axes and batch % size == 0:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def cache_specs(cfg: ModelConfig, mesh, batch: int, seq_len: int):
+    """ShapeDtypeStructs for the decode cache with heuristic shardings:
+    leading groups axis replicated; batch dim over data axes; then the
+    largest remaining dim sharded over 'model' when divisible."""
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.cache_init(cfg, batch, seq_len))
+    bspec = _batch_spec(mesh, batch)
+    msize = mesh.shape["model"]
+
+    def one(leaf):
+        parts = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 2:
+            parts[1] = bspec if leaf.shape[1] == batch else None
+        cands = sorted(range(2, len(leaf.shape)),
+                       key=lambda i: -leaf.shape[i])
+        for i in cands:
+            if leaf.shape[i] % msize == 0:
+                parts[i] = "model"
+                break
+        while parts and parts[-1] is None:
+            parts.pop()
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=NamedSharding(mesh, P(*parts)))
+
+    return jax.tree.map(one, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# program builders
+# ---------------------------------------------------------------------------
+
+def build_train(arch: str, shape_name, mesh, rules,
+                train_cfg: TrainConfig | None = None, base_cfg=None):
+    """IMPALA LM learner step + input specs for a train shape."""
+    cfg = resolve_config(arch, shape_name, base_cfg)
+    ishape = _shape(shape_name)
+    train_cfg = train_cfg or TrainConfig()
+    opt = make_optimizer(train_cfg)
+
+    params, axes = abstract_params(cfg, mesh, rules)
+    opt_shapes = jax.eval_shape(opt.init, params)
+    opt_axes = {k: jax.tree.map(lambda _: None, v) for k, v in
+                opt_shapes.items()}
+    # ZeRO-1: optimizer state also sharded over the data axes
+    opt_shardings = {k: shd.zero1_shardings(axes, opt_shapes[k], mesh, rules)
+                     for k in opt_shapes}
+    opt_state = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        opt_shapes, opt_shardings)
+
+    # ZeRO-2: constrain gradients to the (param-sharding + data-axis) layout
+    # of the optimizer state, so the gradient reduction lowers to a
+    # reduce-scatter and all fp32 elementwise temporaries stay sharded.
+    grad_shardings = shd.zero1_shardings(
+        axes, jax.tree.map(lambda x: x, params), mesh, rules)
+
+    def grad_constraint(grads):
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            grad_shardings)
+
+    step_fn = learner_lib.make_lm_train_step(
+        cfg, opt, train_cfg, grad_constraint=grad_constraint)
+
+    b, s = ishape.global_batch, ishape.seq_len
+    bspec = _batch_spec(mesh, b)
+    batch = {
+        "tokens": _sds((b, s + 1), jnp.int32, mesh, P(bspec, None)),
+        "behavior_logprob": _sds((b, s), jnp.float32, mesh, P(bspec, None)),
+        "reward": _sds((b, s), jnp.float32, mesh, P(bspec, None)),
+        "done": _sds((b, s), jnp.bool_, mesh, P(bspec, None)),
+    }
+    if cfg.vision_seq:
+        batch["vision"] = _sds((b, cfg.vision_seq, cfg.d_model),
+                               jnp.dtype(cfg.dtype), mesh,
+                               P(bspec, None, None))
+    step = _sds((), jnp.int32, mesh, P())
+
+    def wrapped(params, opt_state, step, batch):
+        with shd.use_rules(mesh, rules):
+            return step_fn(params, opt_state, step, batch)
+
+    scalar = NamedSharding(mesh, P())
+    out_shardings = (
+        jax.tree.map(lambda x: x.sharding, params),
+        jax.tree.map(lambda x: x.sharding, opt_state),
+        jax.tree.map(lambda _: scalar,
+                     {"loss": 0, "pg_loss": 0, "baseline_loss": 0,
+                      "entropy_loss": 0, "reward_per_step": 0}),
+    )
+    jit_kwargs = {"donate_argnums": (0, 1), "out_shardings": out_shardings}
+    return wrapped, (params, opt_state, step, batch), cfg, jit_kwargs
+
+
+def build_prefill(arch: str, shape_name, mesh, rules, base_cfg=None):
+    cfg = resolve_config(arch, shape_name, base_cfg)
+    ishape = _shape(shape_name)
+    b, s = ishape.global_batch, ishape.seq_len
+    params, _ = abstract_params(cfg, mesh, rules)
+    bspec = _batch_spec(mesh, b)
+    tokens = _sds((b, s), jnp.int32, mesh, P(bspec, None))
+    args = [params, tokens]
+    if cfg.vision_seq:
+        args.append(_sds((b, cfg.vision_seq, cfg.d_model),
+                         jnp.dtype(cfg.dtype), mesh, P(bspec, None, None)))
+
+    cache_out = cache_specs(cfg, mesh, b, s)
+
+    def prefill_step(params, tokens, vision=None):
+        with shd.use_rules(mesh, rules):
+            hidden, aux, cache = model_lib.prefill(
+                params, tokens, cfg=cfg, vision=vision, cache_seq_len=s)
+            logits = model_lib.logits_from_hidden(params, cfg,
+                                                  hidden[:, -1:])
+        return logits, cache
+
+    out_shardings = (
+        NamedSharding(mesh, P(bspec, None, None)),
+        jax.tree.map(lambda x: x.sharding, cache_out),
+    )
+    return prefill_step, tuple(args), cfg, {"out_shardings": out_shardings}
+
+
+def build_decode(arch: str, shape_name, mesh, rules, base_cfg=None):
+    cfg = resolve_config(arch, shape_name, base_cfg)
+    ishape = _shape(shape_name)
+    b, s = ishape.global_batch, ishape.seq_len
+    params, _ = abstract_params(cfg, mesh, rules)
+    bspec = _batch_spec(mesh, b)
+    tokens = _sds((b, 1), jnp.int32, mesh, P(bspec, None))
+    cache = cache_specs(cfg, mesh, b, s)
+    pos = _sds((), jnp.int32, mesh, P())
+
+    def serve_step(params, tokens, cache, pos):
+        with shd.use_rules(mesh, rules):
+            # unroll: per-layer in-place cache writes on the donated buffer
+            # (a scan would double-buffer the cache); also makes all layers
+            # visible to cost_analysis (no while loop).
+            return model_lib.serve_step(params, tokens, cache, pos, cfg=cfg,
+                                        unroll=True)
+
+    out_shardings = (
+        NamedSharding(mesh, P(bspec, None, None)),       # logits
+        NamedSharding(mesh, P(bspec, None)),             # baseline
+        jax.tree.map(lambda x: x.sharding, cache),       # new cache
+    )
+    jit_kwargs = {"donate_argnums": (2,), "out_shardings": out_shardings}
+    return serve_step, (params, tokens, cache, pos), cfg, jit_kwargs
+
+
+def build_program(arch: str, shape_name, mesh, rules, base_cfg=None):
+    kind = _shape(shape_name).kind
+    if kind == "train":
+        return build_train(arch, shape_name, mesh, rules, base_cfg=base_cfg)
+    if kind == "prefill":
+        return build_prefill(arch, shape_name, mesh, rules,
+                             base_cfg=base_cfg)
+    return build_decode(arch, shape_name, mesh, rules, base_cfg=base_cfg)

@@ -1,0 +1,1 @@
+from repro.models import model, blocks, attention, mlp, moe, mamba, xlstm, convnet, common  # noqa: F401

@@ -1,0 +1,183 @@
+"""Super-block composition: each architecture is ``num_groups`` repetitions
+of ``cfg.block_pattern`` (a tuple of (mixer, ffn) layer specs). One
+super-block's params/caches form the pytree that ``model.py`` stacks and
+scans over.
+
+Residual wiring: pre-norm (gemma2 adds sandwich post-norms). MoE aux losses
+are returned as a summed (load_balance, z_loss, dropped) triple.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mamba, mlp, moe, xlstm
+from repro.models.common import make_norm
+
+ATTN_KINDS = ("attn", "local_attn", "swa_attn", "xattn")
+
+
+def zero_aux():
+    """(load_balance, z_loss, dropped_frac) accumulator — created inside
+    traced code (no device arrays at import time)."""
+    return (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.float32))
+
+
+def _mixer_init(key, cfg, kind):
+    if kind in ATTN_KINDS:
+        return attention.attn_init(key, cfg, kind)
+    if kind == "mamba":
+        return mamba.mamba_init(key, cfg)
+    if kind == "mlstm":
+        return xlstm.mlstm_init(key, cfg)
+    if kind == "slstm":
+        return xlstm.slstm_init(key, cfg)
+    raise ValueError(kind)
+
+
+def block_init(key, cfg, pattern=None):
+    """Params for one super-block."""
+    pattern = pattern if pattern is not None else cfg.block_pattern
+    norm_init, _ = make_norm(cfg)
+    p = {}
+    for idx, (mixer, ffn) in enumerate(pattern):
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        layer = {"pre_norm": norm_init(k3, cfg.d_model),
+                 "mixer": _mixer_init(k1, cfg, mixer)}
+        if cfg.sandwich_norm:
+            layer["post_norm"] = norm_init(k4, cfg.d_model)
+        if ffn != "none":
+            key, k5, k6, k7 = jax.random.split(key, 4)
+            layer["ffn_pre_norm"] = norm_init(k5, cfg.d_model)
+            if ffn == "moe":
+                layer["ffn"] = moe.moe_init(k6, cfg)
+            else:
+                layer["ffn"] = mlp.mlp_init(k6, cfg, ffn)
+            if cfg.sandwich_norm:
+                layer["ffn_post_norm"] = norm_init(k7, cfg.d_model)
+        p[f"l{idx}"] = layer
+    return p
+
+
+def _add_aux(a, b):
+    return tuple(x + y for x, y in zip(a, b))
+
+
+def _apply_ffn(layer, x, cfg, ffn, norm_fn):
+    from repro.distributed.sharding import gather_seq
+    aux = zero_aux()
+    h = gather_seq(norm_fn(layer["ffn_pre_norm"], x))
+    if ffn == "moe":
+        h, moe_aux = moe.moe_apply(layer["ffn"], h, cfg)
+        aux = (moe_aux.load_balance, moe_aux.z_loss, moe_aux.dropped_frac)
+    else:
+        h = mlp.mlp_apply(layer["ffn"], h, ffn)
+    if cfg.sandwich_norm:
+        h = norm_fn(layer["ffn_post_norm"], h)
+    return x + h, aux
+
+
+def block_apply(params, x, *, cfg, positions, pattern=None, vision=None,
+                impl=None, build_cache=False, seq_len=None, dtype=None):
+    """Full-sequence super-block. Returns (x, aux, cache|None).
+
+    build_cache=True (prefill): returns the decode cache slice for this block.
+    """
+    pattern = pattern if pattern is not None else cfg.block_pattern
+    _, norm_fn = make_norm(cfg)
+    aux = zero_aux()
+    cache = {} if build_cache else None
+
+    from repro.distributed.sharding import gather_seq
+
+    def layer_fn(layer, x, mixer, ffn):
+        aux = zero_aux()
+        lcache = None
+        # gather the seq-parallel residual HERE, on the bf16 norm output
+        h = gather_seq(norm_fn(layer["pre_norm"], x))
+        if mixer in ATTN_KINDS:
+            kv_src = vision if mixer == "xattn" else None
+            h, kv = attention.attn_apply(layer["mixer"], h, cfg=cfg,
+                                         kind=mixer, positions=positions,
+                                         kv_src=kv_src, impl=impl)
+            if build_cache:
+                lcache = attention.attn_prefill_cache(
+                    cfg, mixer, kv, seq_len, dtype)
+        elif mixer == "mamba":
+            h, st = mamba.mamba_apply(layer["mixer"], h, cfg,
+                                      return_state=build_cache)
+            lcache = st
+        elif mixer == "mlstm":
+            h, st = xlstm.mlstm_apply(layer["mixer"], h, cfg,
+                                      return_state=build_cache)
+            lcache = st
+        elif mixer == "slstm":
+            h, st = xlstm.slstm_apply(layer["mixer"], h, cfg,
+                                      return_state=build_cache)
+            lcache = st
+        if cfg.sandwich_norm:
+            h = norm_fn(layer["post_norm"], h)
+        x = x + h
+        if ffn != "none":
+            x, ffn_aux = _apply_ffn(layer, x, cfg, ffn, norm_fn)
+            aux = _add_aux(aux, ffn_aux)
+        return x, aux, lcache
+
+    # nested remat: for multi-layer super-blocks (llama-vision's 5-layer
+    # group, gemma2's pairs) each LAYER is its own checkpoint region, so
+    # the block backward holds one layer's residuals at a time.
+    if cfg.remat and len(pattern) > 1 and not build_cache:
+        layer_fn = jax.checkpoint(layer_fn, static_argnums=(2, 3))
+
+    for idx, (mixer, ffn) in enumerate(pattern):
+        x, layer_aux, lcache = layer_fn(params[f"l{idx}"], x, mixer, ffn)
+        aux = _add_aux(aux, layer_aux)
+        if build_cache:
+            cache[f"l{idx}"] = lcache
+    return x, aux, cache
+
+
+def block_decode(params, x, cache, *, cfg, pos, pattern=None):
+    """One-token decode through a super-block. Returns (x, new_cache)."""
+    pattern = pattern if pattern is not None else cfg.block_pattern
+    _, norm_fn = make_norm(cfg)
+    new_cache = {}
+    for idx, (mixer, ffn) in enumerate(pattern):
+        layer = params[f"l{idx}"]
+        lcache = cache[f"l{idx}"]
+        h = norm_fn(layer["pre_norm"], x)
+        if mixer in ATTN_KINDS:
+            h, nc = attention.attn_decode(layer["mixer"], h, lcache,
+                                          cfg=cfg, kind=mixer, pos=pos)
+        elif mixer == "mamba":
+            h, nc = mamba.mamba_decode(layer["mixer"], h, lcache, cfg)
+        elif mixer == "mlstm":
+            h, nc = xlstm.mlstm_decode(layer["mixer"], h, lcache, cfg)
+        elif mixer == "slstm":
+            h, nc = xlstm.slstm_decode(layer["mixer"], h, lcache, cfg)
+        new_cache[f"l{idx}"] = nc
+        if cfg.sandwich_norm:
+            h = norm_fn(layer["post_norm"], h)
+        x = x + h
+        if ffn != "none":
+            x, _ = _apply_ffn(layer, x, cfg, ffn, norm_fn)
+    return x, new_cache
+
+
+def block_cache_init(cfg, batch, seq_len, dtype, pattern=None):
+    """Zero-initialised decode cache for one super-block."""
+    pattern = pattern if pattern is not None else cfg.block_pattern
+    cache = {}
+    for idx, (mixer, _) in enumerate(pattern):
+        if mixer in ATTN_KINDS:
+            cache[f"l{idx}"] = attention.attn_cache_init(
+                cfg, mixer, batch, seq_len, dtype)
+        elif mixer == "mamba":
+            cache[f"l{idx}"] = mamba.mamba_cache_init(cfg, batch, dtype)
+        elif mixer == "mlstm":
+            cache[f"l{idx}"] = xlstm.mlstm_state_init(cfg, batch)
+        elif mixer == "slstm":
+            cache[f"l{idx}"] = xlstm.slstm_state_init(cfg, batch)
+    return cache

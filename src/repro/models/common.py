@@ -1,0 +1,149 @@
+"""Shared model building blocks: params-with-logical-axes, norms, rotary.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). During init every
+leaf is created as an ``AxisParam(value, axes)`` carrying *logical* sharding
+axes (MaxText-style); ``split_params`` separates the value tree from the axes
+tree so the distributed layer can map logical axes -> mesh axes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AxisParam(NamedTuple):
+    value: Any
+    axes: Tuple[str, ...]
+
+
+def param(key, shape, axes, dtype=jnp.float32, scale=None, init="normal"):
+    """Create an AxisParam. ``scale=None`` -> 1/sqrt(fan_in) (first dim)."""
+    assert len(shape) == len(axes), (shape, axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            scale = 1.0 / np.sqrt(max(1, shape[0]))
+        v = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+    return AxisParam(v, tuple(axes))
+
+
+def is_axis_param(x):
+    return isinstance(x, AxisParam)
+
+
+def split_params(tree):
+    """Split a tree of AxisParam into (values, axes) trees."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_axis_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_axis_param)
+    return values, axes
+
+
+def stack_init(init_fn, key, n, *args, **kwargs):
+    """Stack ``n`` independent inits along a leading 'layers' logical axis.
+
+    ``init_fn(key, *args, **kwargs)`` must return a tree of AxisParam. Only
+    the values are vmapped (string axes are not valid vmap leaves); the axes
+    tree is taken from a prototype call.
+    """
+    proto = init_fn(jax.random.PRNGKey(0), *args, **kwargs)
+    _, axes = split_params(proto)
+    keys = jax.random.split(key, n)
+    values = jax.vmap(lambda k: split_params(init_fn(k, *args, **kwargs))[0])(keys)
+    return jax.tree.map(
+        lambda v, ax: AxisParam(v, ("layers",) + tuple(ax)), values, axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(key, dim, axes=("embed",)):
+    del key
+    return {"scale": param(None, (dim,), axes, init="zeros")}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    """RMSNorm with (1 + scale) parameterisation (gemma/qwen style), fp32 stats."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(key, dim, axes=("embed",)):
+    del key
+    return {
+        "scale": param(None, (dim,), axes, init="zeros"),
+        "bias": param(None, (dim,), axes, init="zeros"),
+    }
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + params["scale"].astype(jnp.float32)) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def make_norm(cfg):
+    if cfg.norm == "layernorm":
+        return layernorm_init, lambda p, x: layernorm(p, x, cfg.norm_eps)
+    return rmsnorm_init, lambda p, x: rmsnorm(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(positions, dim):
+    """(..., S) int -> (..., S, dim) float32 sinusoidal embedding."""
+    half = dim // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+def dense(w, x):
+    """x @ w with fp32 accumulation on the MXU."""
+    return jnp.einsum("...i,io->...o", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)

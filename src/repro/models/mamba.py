@@ -1,0 +1,198 @@
+"""Mamba2 mixer (SSD — state-space duality, chunked matmul form).
+
+TPU adaptation: the chunked SSD formulation (intra-chunk quadratic matmuls +
+inter-chunk recurrence over chunk states) maps the selective scan onto the
+MXU; the sequential CUDA scan of the original kernel is deliberately NOT
+ported (see DESIGN.md §8).
+
+Shapes: x (B,S,d); d_inner = expand*d; H = d_inner/headdim heads, P=headdim,
+N = ssm_state. Single B/C group (n_groups=1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import param, rmsnorm
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba_init(key, cfg, kind="mamba"):
+    del kind
+    d = cfg.d_model
+    d_in, nh, p, n = _dims(cfg)
+    w = cfg.ssm_conv_width
+    ks = jax.random.split(key, 8)
+    conv_ch = d_in + 2 * n
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba default)
+    u = jax.random.uniform(ks[5], (nh,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "in_proj_z": param(ks[0], (d, d_in), ("embed", "mlp")),
+        "in_proj_x": param(ks[1], (d, d_in), ("embed", "mlp")),
+        "in_proj_bc": param(ks[2], (d, 2 * n), ("embed", "ssm_state2")),
+        "in_proj_dt": param(ks[3], (d, nh), ("embed", "ssm_heads")),
+        "conv_w": param(ks[4], (w, conv_ch), ("conv_width", "conv_ch"),
+                        scale=w ** -0.5),
+        "conv_b": param(None, (conv_ch,), ("conv_ch",), init="zeros"),
+        "dt_bias": param(None, (nh,), ("ssm_heads",), init="zeros")._replace(value=dt_bias),
+        "a_log": param(None, (nh,), ("ssm_heads",), init="ones"),
+        "d_skip": param(None, (nh,), ("ssm_heads",), init="ones"),
+        "norm": param(None, (d_in,), ("mlp",), init="zeros"),
+        "out_proj": param(ks[6], (d_in, d), ("mlp", "embed")),
+    }
+
+
+def _conv1d(x, w, b, state=None):
+    """Causal depthwise conv. x: (B,S,C); w: (W,C). state: (B,W-1,C) or None.
+
+    Returns (y, new_state) where new_state holds the last W-1 inputs.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, xp.shape[1] - (width - 1):]
+    return jax.nn.silu(y + b), new_state
+
+
+def _segsum(a):
+    """a: (..., L) -> (..., L, L) lower-triangular segment sums:
+    out[l, s] = sum_{r=s+1..l} a[r], -inf above diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def mamba_apply(params, x, cfg, state=None, return_state=False):
+    """Full-sequence (chunked) Mamba2. x: (B,S,d).
+
+    state: optional dict {conv (B,W-1,C), ssm (B,H,P,N)} to continue from.
+    Returns (y, new_state | None).
+    """
+    b, s, d = x.shape
+    d_in, nh, p, n = _dims(cfg)
+    L = min(cfg.ssm_chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+
+    z = jnp.einsum("bsd,de->bse", x, params["in_proj_z"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    xs = jnp.einsum("bsd,de->bse", x, params["in_proj_x"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    bc = jnp.einsum("bsd,de->bse", x, params["in_proj_bc"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    dt = jnp.einsum("bsd,dh->bsh", x, params["in_proj_dt"],
+                    preferred_element_type=jnp.float32)
+
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _conv1d(conv_in, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xs, bmat, cmat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])               # (B,S,H) fp32
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))          # (H,)
+    da = dt * a                                                 # (B,S,H) <=0
+
+    # chunk-major layout; lax.scan over chunks keeps the (L,L) decay matrix
+    # transient per-chunk instead of materialised for all chunks at once.
+    xh = xs.reshape(b, nc, L, nh, p).astype(jnp.float32)
+    bh = bmat.reshape(b, nc, L, n).astype(jnp.float32)
+    ch = cmat.reshape(b, nc, L, n).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, L, nh)
+    dac = da.reshape(b, nc, L, nh)                              # (B,nc,L,H)
+    xw = xh * dtc[..., None]                                    # dt-weighted input
+
+    init = (jnp.zeros((b, nh, p, n), jnp.float32) if state is None
+            else state["ssm"].astype(jnp.float32))
+
+    @jax.checkpoint
+    def chunk_step(h, inputs):
+        # checkpointed: the (b,H,L,L) decay matrix is recomputed in backward
+        c_i, b_i, x_i, da_i = inputs            # (b,L,n) (b,L,n) (b,L,H,p) (b,L,H)
+        acs = jnp.cumsum(da_i, axis=1)                          # (b,L,H)
+        lmat = jnp.exp(_segsum(da_i.transpose(0, 2, 1)))        # (b,H,L,L)
+        y_diag = jnp.einsum("bln,bsn,bhls,bshp->blhp",
+                            c_i, b_i, lmat, x_i)
+        decay_states = jnp.exp(acs[:, -1:, :] - acs)            # (b,L,H)
+        new_state = jnp.einsum("bln,blh,blhp->bhpn",
+                               b_i, decay_states, x_i)
+        y_off = jnp.einsum("bln,blh,bhpn->blhp", c_i, jnp.exp(acs), h)
+        h_new = h * jnp.exp(acs[:, -1, :])[..., None, None] + new_state
+        return h_new, y_diag + y_off
+
+    last, ys = jax.lax.scan(
+        chunk_step, init,
+        (ch.transpose(1, 0, 2, 3), bh.transpose(1, 0, 2, 3),
+         xw.transpose(1, 0, 2, 3, 4), dac.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, p)
+    y = y + params["d_skip"][None, None, :, None] * xh.reshape(b, s, nh, p)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm"]}, y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if return_state:
+        return out, {"conv": new_conv, "ssm": last.astype(jnp.float32)}
+    return out, None
+
+
+def mamba_cache_init(cfg, batch, dtype):
+    d_in, nh, p, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, p, n), jnp.float32),
+    }
+
+
+def mamba_decode(params, x, cache, cfg):
+    """Single-token step. x: (B,1,d). Returns (y (B,1,d), new_cache)."""
+    b = x.shape[0]
+    d_in, nh, p, n = _dims(cfg)
+
+    z = jnp.einsum("bsd,de->bse", x, params["in_proj_z"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    xs = jnp.einsum("bsd,de->bse", x, params["in_proj_x"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    bc = jnp.einsum("bsd,de->bse", x, params["in_proj_bc"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    dt = jnp.einsum("bsd,dh->bsh", x, params["in_proj_dt"],
+                    preferred_element_type=jnp.float32)
+
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_out, new_conv = _conv1d(conv_in, params["conv_w"], params["conv_b"],
+                                 cache["conv"])
+    xs, bmat, cmat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])[:, 0]          # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a)                                        # (B,H)
+
+    xh = xs[:, 0].reshape(b, nh, p).astype(jnp.float32)
+    bv = bmat[:, 0].astype(jnp.float32)                          # (B,N)
+    cv = cmat[:, 0].astype(jnp.float32)
+    h = cache["ssm"] * dec[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, bv, dt)
+    y = jnp.einsum("bhpn,bn->bhp", h, cv)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm"]},
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"conv": new_conv, "ssm": h}

@@ -1,0 +1,42 @@
+"""Feed-forward layers: SwiGLU (llama/qwen), GeGLU (gemma), GELU (musicgen)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import param
+
+
+def mlp_init(key, cfg, ffn):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if ffn in ("swiglu", "geglu"):
+        return {
+            "wi": param(ks[0], (d, f), ("embed", "mlp")),
+            "wg": param(ks[1], (d, f), ("embed", "mlp")),
+            "wo": param(ks[2], (f, d), ("mlp", "embed")),
+        }
+    if ffn == "gelu":
+        return {
+            "wi": param(ks[0], (d, f), ("embed", "mlp")),
+            "wo": param(ks[2], (f, d), ("mlp", "embed")),
+        }
+    raise ValueError(ffn)
+
+
+def mlp_apply(params, x, ffn):
+    h = jnp.einsum("...d,df->...f", x, params["wi"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if ffn == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["wg"],
+                       preferred_element_type=jnp.float32)
+        h = h * jax.nn.silu(g).astype(x.dtype)
+    elif ffn == "geglu":
+        g = jnp.einsum("...d,df->...f", x, params["wg"],
+                       preferred_element_type=jnp.float32)
+        h = h * jax.nn.gelu(g, approximate=True).astype(x.dtype)
+    elif ffn == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,222 @@
+"""Top-level decoder model: embed -> lax.scan over stacked super-blocks
+(-> optional zamba-style shared global block per group) -> final norm ->
+heads (LM logits over vocab = policy logits; scalar baseline for IMPALA).
+
+All params are AxisParam trees at init; call ``common.split_params`` to get
+(values, logical_axes). Apply functions take the *values* tree.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, blocks
+from repro.models.common import (make_norm, param, sinusoidal_pos_emb,
+                                 softcap, split_params, stack_init)
+
+SHARED_PATTERN = (("attn", "swiglu"),)  # zamba-style shared global block
+
+
+def _constrain_act(x):
+    from repro.distributed.sharding import constrain
+    return constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+
+def model_init(key, cfg):
+    """Returns an AxisParam tree for the full model."""
+    ks = jax.random.split(key, 6)
+    norm_init, _ = make_norm(cfg)
+    p = {
+        # 1/sqrt(d): keeps initial logits O(1) for both tied (h @ embed.T)
+        # and untied heads -> near-uniform initial policy (entropy ~ log V),
+        # which IMPALA's importance ratios need at step 0.
+        "embed": param(ks[0], (cfg.vocab_size, cfg.d_model),
+                       ("vocab", "embed"), scale=cfg.d_model ** -0.5),
+        "blocks": stack_init(blocks.block_init, ks[1], cfg.num_groups, cfg),
+        "final_norm": norm_init(ks[2], cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = param(ks[3], (cfg.d_model, cfg.vocab_size),
+                             ("embed", "vocab"))
+    if cfg.shared_attn_every:
+        p["shared"] = blocks.block_init(ks[4], cfg, pattern=SHARED_PATTERN)
+    if cfg.baseline_head:
+        p["baseline"] = param(ks[5], (cfg.d_model,), ("embed",),
+                              scale=cfg.d_model ** -0.5)
+    return p
+
+
+def init(key, cfg):
+    """Convenience: returns (params_values, logical_axes)."""
+    return split_params(model_init(key, cfg))
+
+
+def _embed(params, cfg, tokens, positions):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_pos_emb(positions, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def unembed_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def logits_from_hidden(params, cfg, h):
+    w = unembed_matrix(params, cfg)
+    logits = jnp.einsum("...d,dv->...v", h, w.astype(h.dtype),
+                        preferred_element_type=jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    return logits  # fp32
+
+
+def baseline_from_hidden(params, cfg, h):
+    if not cfg.baseline_head:
+        return None
+    return jnp.einsum("...d,d->...", h.astype(jnp.float32),
+                      params["baseline"].astype(jnp.float32))
+
+
+def forward(params, tokens, *, cfg, vision=None, impl=None,
+            build_cache=False, cache_seq_len=None):
+    """Forward over a full sequence.
+
+    tokens: (B, S) int32. vision: (B, Sv, d) patch embeddings (VLM stub).
+    Returns (hidden (B,S,d), aux, cache|None). aux = (lb, z, dropped) summed
+    over all MoE layers.
+    """
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+    x = _embed(params, cfg, tokens, positions)
+    dtype = x.dtype
+
+    def body(carry, block_params):
+        x, aux = carry
+        # residual-stream constraint: under seq-parallel rules the saved
+        # scan carries are sharded over the model axis (no-op otherwise)
+        x = _constrain_act(x)
+        x, baux, cache = blocks.block_apply(
+            block_params, x, cfg=cfg, positions=positions, vision=vision,
+            impl=impl, build_cache=build_cache, seq_len=cache_seq_len,
+            dtype=dtype)
+        if cfg.shared_attn_every:
+            x, saux, scache = blocks.block_apply(
+                params["shared"], x, cfg=cfg, positions=positions,
+                pattern=SHARED_PATTERN, impl=impl, build_cache=build_cache,
+                seq_len=cache_seq_len, dtype=dtype)
+            baux = blocks._add_aux(baux, saux)
+            if build_cache:
+                cache = {"block": cache, "shared": scache}
+        elif build_cache:
+            cache = {"block": cache}
+        return (x, blocks._add_aux(aux, baux)), cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), caches = jax.lax.scan(body, (x, blocks.zero_aux()),
+                                    params["blocks"])
+    _, norm_fn = make_norm(cfg)
+    x = norm_fn(params["final_norm"], x)
+    return x, aux, (caches if build_cache else None)
+
+
+def cache_init(cfg, batch, seq_len, dtype=None):
+    """Zero decode cache: per-group stacked pytree matching ``forward``'s."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    one = {"block": blocks.block_cache_init(cfg, batch, seq_len, dtype)}
+    if cfg.shared_attn_every:
+        one["shared"] = blocks.block_cache_init(cfg, batch, seq_len, dtype,
+                                                pattern=SHARED_PATTERN)
+    return jax.tree.map(
+        lambda a: jnp.zeros((cfg.num_groups,) + a.shape, a.dtype), one)
+
+
+def prefill(params, tokens, *, cfg, vision=None, impl=None, cache_seq_len):
+    """Prefill: forward + build decode caches.
+
+    Returns (hidden (B,S,d), aux, cache). cache leaves have leading
+    num_groups axis (scan-stacked).
+    """
+    return forward(params, tokens, cfg=cfg, vision=vision, impl=impl,
+                   build_cache=True, cache_seq_len=cache_seq_len)
+
+
+def decode_step(params, tokens, cache, pos, *, cfg, unroll=False):
+    """One-token decode. tokens: (B,1) int32; pos: scalar int32 (position of
+    this token). Returns (hidden (B,1,d), new_cache).
+
+    unroll=True (the production serve path): a static Python loop over
+    groups with per-layer in-place cache writes — lax.scan would carry the
+    whole cache as xs/ys and double-buffer it (2x cache HBM); the unrolled
+    form lets XLA alias the donated cache buffer layer by layer.
+    """
+    x = _embed(params, cfg, tokens, jnp.asarray(pos)[None])
+
+    def body(x, block_params, cache_slice):
+        x, nc = blocks.block_decode(block_params, x, cache_slice["block"],
+                                    cfg=cfg, pos=pos)
+        nc = {"block": nc}
+        if cfg.shared_attn_every:
+            x, nsc = blocks.block_decode(params["shared"], x,
+                                         cache_slice["shared"], cfg=cfg,
+                                         pos=pos, pattern=SHARED_PATTERN)
+            nc["shared"] = nsc
+        return x, nc
+
+    if unroll:
+        # cache-as-carry: the scan carries the WHOLE cache and each step
+        # dynamic-updates its group slice in place. XLA aliases while-loop
+        # carries (same shape in/out), so the donated cache buffer is
+        # updated without the 2x double-buffering that cache-as-xs/ys
+        # (stacked ys allocation) costs.
+        def carry_body(carry, inputs):
+            x, full_cache = carry
+            g, bp = inputs
+            cs = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, g, 0,
+                                                       keepdims=False),
+                full_cache)
+            x, nc = body(x, bp, cs)
+            full_cache = jax.tree.map(
+                lambda full, upd: jax.lax.dynamic_update_index_in_dim(
+                    full, upd.astype(full.dtype), g, 0), full_cache, nc)
+            return (x, full_cache), None
+
+        (x, new_cache), _ = jax.lax.scan(
+            carry_body, (x, cache),
+            (jnp.arange(cfg.num_groups), params["blocks"]))
+    else:
+        x, new_cache = jax.lax.scan(
+            lambda x, xs: body(x, xs[0], xs[1]),
+            x, (params["blocks"], cache))
+    _, norm_fn = make_norm(cfg)
+    x = norm_fn(params["final_norm"], x)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# convenience heads for drivers/tests
+# ---------------------------------------------------------------------------
+
+def apply_lm(params, tokens, *, cfg, vision=None, impl=None):
+    """(B,S) -> (logits fp32 (B,S,V), baseline (B,S)|None, aux)."""
+    h, aux, _ = forward(params, tokens, cfg=cfg, vision=vision, impl=impl)
+    return logits_from_hidden(params, cfg, h), \
+        baseline_from_hidden(params, cfg, h), aux
+
+
+def serve_step(params, tokens, cache, pos, *, cfg, unroll=False):
+    """(B,1) + cache -> (logits fp32 (B,1,V), baseline, new_cache)."""
+    h, new_cache = decode_step(params, tokens, cache, pos, cfg=cfg,
+                               unroll=unroll)
+    return (logits_from_hidden(params, cfg, h),
+            baseline_from_hidden(params, cfg, h), new_cache)

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with GShard-style
+grouped, capacity-based dispatch (one-hot dispatch/combine einsums).
+
+Tokens are split into groups of ``moe_group_size``; each group dispatches
+into per-expert capacity buffers of C = factor * g * k / E. This bounds the
+dispatch tensors at O(g * E * C) per group (the flat formulation is O(n^2)-ish
+and infeasible at 65k tokens/device).
+
+The expert weights carry an explicit ``expert`` logical axis and the expert
+intermediates keep an expert dimension, so expert parallelism is a pure
+sharding-rule change (XLA inserts the all-to-all at the dispatch einsum).
+
+Aux losses follow Switch/Mixtral: load-balance (mean routed fraction x mean
+router prob per expert, scaled by E/k) and router z-loss.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import param
+
+MOE_GROUP_SIZE = 512
+
+
+class MoEAux(NamedTuple):
+    load_balance: jnp.ndarray  # scalar
+    z_loss: jnp.ndarray        # scalar
+    dropped_frac: jnp.ndarray  # fraction of token-slots dropped by capacity
+
+
+def moe_init(key, cfg, ffn="moe"):
+    del ffn
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": param(ks[0], (d, e), ("embed", "expert"), scale=d ** -0.5),
+        "wi": param(ks[1], (e, d, f), ("expert", "embed", "mlp")),
+        "wg": param(ks[2], (e, d, f), ("expert", "embed", "mlp")),
+        "wo": param(ks[3], (e, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def _capacity(cfg, group_size):
+    c = int(cfg.capacity_factor * group_size * cfg.num_experts_per_tok
+            / cfg.num_experts)
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def moe_apply(params, x, cfg):
+    """x: (B, S, d) -> (out, MoEAux). Token-choice top-k over grouped tokens."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    n = b * s
+    gs = min(MOE_GROUP_SIZE, n)
+    assert n % gs == 0, (n, gs)
+    ng = n // gs
+    xt = x.reshape(ng, gs, d)
+
+    logits = jnp.einsum("gnd,de->gne", xt, params["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (g, n, e)
+
+    topk_prob, topk_idx = jax.lax.top_k(probs, k)                 # (g, n, k)
+    topk_prob = topk_prob / jnp.maximum(
+        topk_prob.sum(-1, keepdims=True), 1e-9)
+
+    # --- aux losses (from pre-renormalised probs, global over all tokens) ---
+    onehot = jax.nn.one_hot(topk_idx, e, dtype=jnp.float32)       # (g, n, k, e)
+    me = probs.mean(axis=(0, 1))                                   # (e,)
+    ce = onehot.sum(2).mean(axis=(0, 1))                           # (e,)
+    load_balance = e * jnp.sum(me * ce) / k
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # --- per-group capacity dispatch ---
+    cap = _capacity(cfg, gs)
+    flat = onehot.reshape(ng, gs * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                          # (g, n*k, e)
+    pos_in_expert = jnp.sum(pos.reshape(ng, gs, k, e) * onehot, axis=-1)
+    keep = (pos_in_expert < cap).astype(jnp.float32)               # (g, n, k)
+    dropped = 1.0 - keep.mean()
+
+    # dispatch mask in the model dtype (0/1 exactly representable) and
+    # stop_gradient-ed: it is a step function of the routing decision, so
+    # its cotangent is identically irrelevant — computing it would
+    # materialise (g,n,e,cap) fp32 temporaries in the backward pass.
+    # Router gradients flow through ``combine``'s topk_prob factor.
+    cap_onehot = jax.nn.one_hot(pos_in_expert, cap, dtype=x.dtype)
+    cap_onehot = cap_onehot * keep[..., None].astype(x.dtype)      # (g,n,k,cap)
+    dispatch = jax.lax.stop_gradient(
+        jnp.einsum("gnke,gnkc->gnec", onehot.astype(x.dtype), cap_onehot))
+    # combine folds the slot-k routing weight into the (e, cap) cell the
+    # token occupies (NOT dispatch * sum_k p_k — each slot keeps its own p)
+    combine = jnp.einsum("gnke,gnkc,gnk->gnec",
+                         jax.lax.stop_gradient(onehot.astype(x.dtype)),
+                         jax.lax.stop_gradient(cap_onehot),
+                         topk_prob.astype(x.dtype))
+
+    xin = jnp.einsum("gnec,gnd->gecd", dispatch, xt,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    h = jnp.einsum("gecd,edf->gecf", xin, params["wi"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    g_ = jnp.einsum("gecd,edf->gecf", xin, params["wg"],
+                    preferred_element_type=jnp.float32)
+    h = h * jax.nn.silu(g_).astype(x.dtype)
+    eo = jnp.einsum("gecf,efd->gecd", h, params["wo"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("gnec,gecd->gnd", combine.astype(x.dtype), eo,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    aux = MoEAux(load_balance, z_loss, dropped)
+    return out.reshape(b, s, d), aux

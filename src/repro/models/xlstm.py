@@ -1,0 +1,268 @@
+"""xLSTM mixers: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, sequential recurrence) [arXiv:2405.04517].
+
+TPU adaptation: mLSTM uses the chunkwise-parallel formulation (intra-chunk
+quadratic matmuls + inter-chunk recurrent state (C, n, m)) so training maps
+onto the MXU; sLSTM is a true recurrence (hidden-state feedback through the
+gates) and runs as lax.scan over time — at the assigned scale (d=768, 12L)
+this is memory-bound but cheap.
+
+State conventions:
+  mLSTM: C (B,H,dk,dv), n (B,H,dk), m (B,H)          [log-space stabiliser m]
+  sLSTM: c,n,h (B,H,dh), m (B,H,dh)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import param, rmsnorm
+
+
+def _dims(cfg):
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    return h, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, kind="mlstm"):
+    del kind
+    d = cfg.d_model
+    h, dh = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": param(ks[0], (d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": param(ks[1], (d, h, dh), ("embed", "heads", "head_dim")),
+        "wv": param(ks[2], (d, h, dh), ("embed", "heads", "head_dim")),
+        "wi": param(ks[3], (d, h), ("embed", "heads"), scale=d ** -0.5),
+        "wf": param(ks[4], (d, h), ("embed", "heads"), scale=d ** -0.5),
+        "bf": param(None, (h,), ("heads",), init="ones"),  # forget-bias > 0
+        "wo_gate": param(ks[5], (d, d), ("embed", "embed2")),
+        "norm": param(None, (d,), ("embed",), init="zeros"),
+        "wo": param(jax.random.fold_in(ks[5], 1), (d, d), ("embed", "embed2")),
+    }
+
+
+def _mlstm_qkvif(params, x):
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"],
+                   preferred_element_type=jnp.float32)
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"],
+                   preferred_element_type=jnp.float32)
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"],
+                   preferred_element_type=jnp.float32)
+    i_pre = jnp.einsum("bsd,dh->bsh", x, params["wi"],
+                       preferred_element_type=jnp.float32)
+    f_pre = jnp.einsum("bsd,dh->bsh", x, params["wf"],
+                       preferred_element_type=jnp.float32) + params["bf"]
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_state_init(cfg, batch):
+    h, dh = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+def mlstm_apply(params, x, cfg, state=None, return_state=False):
+    """Chunkwise-parallel mLSTM. x: (B,S,d) -> (y, state|None)."""
+    b, s, d = x.shape
+    h, dh = _dims(cfg)
+    L = min(cfg.xlstm_chunk, s)
+    assert s % L == 0
+    nc = s // L
+    scale = dh ** -0.5
+
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, x)
+    lf = jax.nn.log_sigmoid(f_pre)                              # (B,S,H)
+
+    def rs(t):  # chunk-major reshape (nc, B, L, ...)
+        return t.reshape((b, nc, L) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    ic, lfc = rs(i_pre), rs(lf)
+
+    st = state if state is not None else mlstm_state_init(cfg, b)
+
+    @jax.checkpoint
+    def chunk_step(carry, inputs):
+        C, n, m = carry
+        q_i, k_i, v_i, i_i, lf_i = inputs      # (B,L,H,dh)... gates (B,L,H)
+        F = jnp.cumsum(lf_i, axis=1)                            # (B,L,H)
+        # log-weight of input s for output l (s<=l): F_l - F_s + i_s
+        dmat = (F[:, :, None, :] - F[:, None, :, :]
+                + i_i[:, None, :, :])                           # (B,L,S,H)
+        mask = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+        dmat = jnp.where(mask, dmat, -jnp.inf)
+        # state contribution log-weight at l: m + F_l
+        state_w = m[:, None, :] + F                             # (B,L,H)
+        m_loc = jnp.maximum(dmat.max(axis=2), state_w)          # (B,L,H)
+        dexp = jnp.exp(dmat - m_loc[:, :, None, :])             # (B,L,S,H)
+        sw = jnp.exp(state_w - m_loc)                           # (B,L,H)
+
+        logits = jnp.einsum("blhe,bshe->blsh", q_i, k_i) * scale
+        num_intra = jnp.einsum("blsh,bshe->blhe", logits * dexp, v_i)
+        num_state = jnp.einsum("blhe,bhef->blhf", q_i * scale, C) \
+            * sw[..., None]
+        den_intra = jnp.einsum("blsh,bshe->blhe", dexp,
+                               k_i)  # sum_s dexp * k_s
+        den = jnp.einsum("blhe,blhe->blh", q_i * scale, den_intra) \
+            + jnp.einsum("blhe,bhe->blh", q_i * scale, n) * sw
+        num = num_intra + num_state
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_loc))[..., None]
+
+        # state update to end of chunk
+        b_last = F[:, -1, :]                                    # (B,H)
+        in_w = b_last[:, None, :] - F + i_i                     # (B,L,H)
+        m_new = jnp.maximum(m + b_last, in_w.max(axis=1))       # (B,H)
+        kv_w = jnp.exp(in_w - m_new[:, None, :])                # (B,L,H)
+        C_new = C * jnp.exp(m + b_last - m_new)[..., None, None] + \
+            jnp.einsum("blh,blhe,blhf->bhef", kv_w, k_i, v_i)
+        n_new = n * jnp.exp(m + b_last - m_new)[..., None] + \
+            jnp.einsum("blh,blhe->bhe", kv_w, k_i)
+        return (C_new, n_new, m_new), hout
+
+    (C, n, m), ys = jax.lax.scan(
+        chunk_step, (st["C"], st["n"], st["m"]), (qc, kc, vc, ic, lfc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    y = y.reshape(b, s, d).astype(x.dtype)
+
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["wo_gate"],
+                                  preferred_element_type=jnp.float32))
+    y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps) * gate.astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    new_state = {"C": C, "n": n, "m": m}
+    return out, (new_state if return_state else None)
+
+
+def mlstm_decode(params, x, state, cfg):
+    """Single-token mLSTM step. x: (B,1,d)."""
+    b = x.shape[0]
+    h, dh = _dims(cfg)
+    scale = dh ** -0.5
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                         # (B,H,dh)
+    i_t, lf = i_pre[:, 0], jax.nn.log_sigmoid(f_pre[:, 0])      # (B,H)
+
+    m_new = jnp.maximum(lf + state["m"], i_t)
+    fw = jnp.exp(lf + state["m"] - m_new)[..., None]
+    iw = jnp.exp(i_t - m_new)[..., None]
+    C = state["C"] * fw[..., None] + iw[..., None] * \
+        jnp.einsum("bhe,bhf->bhef", k, v)
+    n = state["n"] * fw + iw * k
+    num = jnp.einsum("bhe,bhef->bhf", q * scale, C)
+    den = jnp.abs(jnp.einsum("bhe,bhe->bh", q * scale, n))
+    hout = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    y = hout.reshape(b, 1, -1).astype(x.dtype)
+
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["wo_gate"],
+                                  preferred_element_type=jnp.float32))
+    y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps) * gate.astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_reference(params, x, cfg, state=None):
+    """Sequential-oracle mLSTM (step-by-step decode recurrence over S)."""
+    b, s, d = x.shape
+    st = state if state is not None else mlstm_state_init(cfg, b)
+    ys = []
+    for t in range(s):
+        y, st = mlstm_decode(params, x[:, t:t + 1], st, cfg)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), st
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, kind="slstm"):
+    del kind
+    d = cfg.d_model
+    h, dh = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        # input projections for gates z, i, f, o
+        "wx": param(ks[0], (d, 4, h, dh), ("embed", "gates", "heads", "head_dim")),
+        # per-head recurrent (block-diagonal) weights
+        "wr": param(ks[1], (4, h, dh, dh), ("gates", "heads", "head_dim", "head_dim2"),
+                    scale=dh ** -0.5),
+        "b": param(None, (4, h, dh), ("gates", "heads", "head_dim"), init="zeros"),
+        "norm": param(None, (d,), ("embed",), init="zeros"),
+        "up": param(ks[2], (d, 2 * d), ("embed", "mlp")),
+        "down": param(ks[3], (d, d), ("mlp", "embed")),
+    }
+
+
+def slstm_state_init(cfg, batch):
+    h, dh = _dims(cfg)
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def _slstm_step(params, xt, st):
+    """xt: (B,4,H,dh) pre-projected gates input; st: state dict."""
+    rec = jnp.einsum("bhe,ghef->bghf", st["h"], params["wr"])
+    g = xt + rec + params["b"]                                   # (B,4,H,dh)
+    z_pre, i_pre, f_pre, o_pre = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    lf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(lf + st["m"], i_pre)
+    fw = jnp.exp(lf + st["m"] - m_new)
+    iw = jnp.exp(i_pre - m_new)
+    c = fw * st["c"] + iw * z
+    n = fw * st["n"] + iw
+    hout = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": hout, "m": m_new}
+
+
+def slstm_apply(params, x, cfg, state=None, return_state=False):
+    """Sequential sLSTM. x: (B,S,d)."""
+    b, s, d = x.shape
+    st = state if state is not None else slstm_state_init(cfg, b)
+    xg = jnp.einsum("bsd,dghe->bsghe", x, params["wx"],
+                    preferred_element_type=jnp.float32)          # (B,S,4,H,dh)
+
+    def step(carry, xt):
+        new = _slstm_step(params, xt, carry)
+        return new, new["h"]
+
+    st_out, hs = jax.lax.scan(step, st, xg.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", y, params["up"],
+                   preferred_element_type=jnp.float32)
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    y = (u1 * jax.nn.silu(u2)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, (st_out if return_state else None)
+
+
+def slstm_decode(params, x, state, cfg):
+    """Single-token sLSTM step. x: (B,1,d)."""
+    b, _, d = x.shape
+    xg = jnp.einsum("bsd,dghe->bsghe", x, params["wx"],
+                    preferred_element_type=jnp.float32)[:, 0]
+    st = _slstm_step(params, xg, state)
+    y = st["h"].reshape(b, 1, d).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", y, params["up"],
+                   preferred_element_type=jnp.float32)
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    y = (u1 * jax.nn.silu(u2)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, st

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw, apply_updates, clip_by_global_norm,  # noqa: F401
+                                    global_norm, make_optimizer, rmsprop, sgd)
+from repro.optim.schedules import constant, cosine, linear_anneal, make_schedule  # noqa: F401

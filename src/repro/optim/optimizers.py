@@ -1,0 +1,139 @@
+"""Pure-pytree optimizers (no optax in the container).
+
+Each optimizer is a (init, update) pair:
+  state = opt.init(params)
+  updates, state = opt.update(grads, state, params, step)
+  params = apply_updates(params, updates)
+
+``rmsprop`` with IMPALA Table G.1 defaults (eps=0.01, decay=0.99) is the
+paper-faithful learner optimizer; ``adamw`` is provided for the LLM-scale
+drivers. Gradient clipping is global-norm (IMPALA: 40).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def _sched(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr, momentum=0.0, grad_clip=None):
+    def init(params):
+        if momentum:
+            return {"mom": jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)}
+        return {}
+
+    def update(grads, state, params, step):
+        del params
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        lr_t = _sched(lr, step)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g,
+                               state["mom"], grads)
+            return jax.tree.map(lambda m: -lr_t * m, mom), {"mom": mom}
+        return jax.tree.map(lambda g: -lr_t * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def rmsprop(lr, decay=0.99, eps=0.01, momentum=0.0, grad_clip=40.0):
+    """TensorFlow-flavored RMSProp, as used by IMPALA/TorchBeast."""
+    def init(params):
+        st = {"ms": jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)}
+        if momentum:
+            st["mom"] = jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return st
+
+    def update(grads, state, params, step):
+        del params
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        lr_t = _sched(lr, step)
+        ms = jax.tree.map(lambda m, g: decay * m + (1 - decay) * g * g,
+                          state["ms"], grads)
+        scaled = jax.tree.map(
+            lambda g, m: g * jax.lax.rsqrt(m + eps), grads, ms)
+        if momentum:
+            mom = jax.tree.map(lambda mo, s: momentum * mo + s,
+                               state["mom"], scaled)
+            return (jax.tree.map(lambda m: -lr_t * m, mom),
+                    {"ms": ms, "mom": mom})
+        return jax.tree.map(lambda s: -lr_t * s, scaled), {"ms": ms}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0, grad_clip=1.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        lr_t = _sched(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * g * g,
+                          state["nu"], grads)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** t), mu)
+        nu_hat = jax.tree.map(lambda n: n / (1 - b2 ** t), nu)
+        upd = jax.tree.map(
+            lambda m, n, p: -lr_t * (m / (jnp.sqrt(n) + eps)
+                                     + weight_decay * p.astype(jnp.float32)),
+            mu_hat, nu_hat, params)
+        return upd, {"mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(train_cfg):
+    """Build the optimizer named in a TrainConfig (with its LR schedule)."""
+    from repro.optim.schedules import make_schedule
+    sched = make_schedule(train_cfg)
+    if train_cfg.optimizer == "rmsprop":
+        return rmsprop(sched, decay=train_cfg.rmsprop_decay,
+                       eps=train_cfg.rmsprop_eps,
+                       momentum=train_cfg.rmsprop_momentum,
+                       grad_clip=train_cfg.grad_clip)
+    if train_cfg.optimizer == "adamw":
+        return adamw(sched, b1=train_cfg.adam_b1, b2=train_cfg.adam_b2,
+                     eps=train_cfg.adam_eps,
+                     weight_decay=train_cfg.weight_decay,
+                     grad_clip=train_cfg.grad_clip)
+    if train_cfg.optimizer == "sgd":
+        return sgd(sched, grad_clip=train_cfg.grad_clip)
+    raise ValueError(train_cfg.optimizer)

@@ -1,0 +1,46 @@
+"""Learning-rate schedules as step -> lr callables (traceable)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_anneal(lr, total_steps, warmup_steps=0):
+    """IMPALA default: linear anneal to 0 over total_steps."""
+    def f(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.asarray(step, jnp.float32)
+        warm = jnp.where(warmup_steps > 0,
+                         jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0),
+                         1.0)
+        frac = jnp.clip(1.0 - step / total_steps, 0.0, 1.0)
+        return lr * warm * frac
+    return f
+
+
+def cosine(lr, total_steps, warmup_steps=0, min_ratio=0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0) \
+            if warmup_steps else 1.0
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * warm * cos
+    return f
+
+
+def make_schedule(train_cfg):
+    if train_cfg.lr_schedule == "linear":
+        return linear_anneal(train_cfg.learning_rate, train_cfg.total_steps,
+                             train_cfg.warmup_steps)
+    if train_cfg.lr_schedule == "cosine":
+        return cosine(train_cfg.learning_rate, train_cfg.total_steps,
+                      train_cfg.warmup_steps)
+    if train_cfg.lr_schedule == "constant":
+        return constant(train_cfg.learning_rate)
+    raise ValueError(train_cfg.lr_schedule)

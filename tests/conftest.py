@@ -1,0 +1,9 @@
+import os
+
+# Tests see the single real CPU device (the 512-device override is dryrun's
+# alone); cap compilation parallelism for stability.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

@@ -1,0 +1,98 @@
+"""DynamicBatcher / BatchingQueue semantics (PolyBeast batcher.cc port)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.batcher import (BatchingQueue, Closed, DynamicBatcher,
+                                bucket_size, stack_trees, unstack_tree)
+
+
+def test_dynamic_batcher_batches_and_scatters():
+    b = DynamicBatcher(max_batch_size=4, timeout_ms=50, pad_to_bucket=False)
+    results = {}
+
+    def actor(i):
+        results[i] = b.compute(np.full((3,), i, np.float32))
+
+    threads = [threading.Thread(target=actor, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    got = None
+    while got is None:
+        got = b.get_batch(timeout=1.0)
+    inputs, respond, n = got
+    assert n == 4 and inputs.shape == (4, 3)
+    respond(inputs * 10.0)  # consumer reply
+    for t in threads:
+        t.join(timeout=5)
+    for i in range(4):
+        np.testing.assert_allclose(results[i], np.full((3,), i * 10.0))
+
+
+def test_dynamic_batcher_timeout_partial_batch():
+    b = DynamicBatcher(max_batch_size=8, timeout_ms=10, pad_to_bucket=True)
+    out = {}
+
+    def actor():
+        out["r"] = b.compute(np.ones((2,), np.float32))
+
+    t = threading.Thread(target=actor)
+    t.start()
+    inputs, respond, n = b.get_batch(timeout=2.0)
+    assert n == 1
+    assert inputs.shape[0] == bucket_size(1)  # padded to the bucket ladder
+    respond(inputs + 1)
+    t.join(timeout=5)
+    np.testing.assert_allclose(out["r"], np.full((2,), 2.0))
+
+
+def test_dynamic_batcher_close_unblocks_actors():
+    b = DynamicBatcher(max_batch_size=4, timeout_ms=10)
+    errs = []
+
+    def actor():
+        try:
+            b.compute(np.zeros(1, np.float32))
+        except Closed:
+            errs.append("closed")
+
+    t = threading.Thread(target=actor)
+    t.start()
+    time.sleep(0.05)
+    b.close()
+    t.join(timeout=5)
+    assert errs == ["closed"]
+
+
+def test_batching_queue_stacks_batch_dim():
+    q = BatchingQueue(batch_size=3, batch_dim=1)
+    for i in range(3):
+        q.put({"x": np.full((5, 2), i, np.float32)})
+    batch = q.get(timeout=1)
+    assert batch["x"].shape == (5, 3, 2)
+    np.testing.assert_allclose(batch["x"][0, :, 0], [0, 1, 2])
+
+
+def test_batching_queue_close_stops_iteration():
+    q = BatchingQueue(batch_size=2)
+    q.put(np.zeros(1))
+    q.close()
+    assert list(q) == []
+
+
+def test_bucket_ladder():
+    assert bucket_size(1) == 1
+    assert bucket_size(3) == 4
+    assert bucket_size(100) == 128
+    assert bucket_size(300) == 300
+
+
+def test_stack_unstack_roundtrip():
+    trees = [{"a": np.ones(3) * i, "b": np.zeros((2, 2))} for i in range(4)]
+    stacked = stack_trees(trees, axis=0)
+    back = unstack_tree(stacked, 4, axis=0)
+    for i in range(4):
+        np.testing.assert_allclose(back[i]["a"], trees[i]["a"])

@@ -1,0 +1,145 @@
+"""Dry-run machinery on a small (2,2) host mesh with reduced configs:
+exercises specs.build_program / sharding rules / collective parsing without
+the 512-device override (subprocess-free)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.configs.base import InputShape
+from repro.distributed.sharding import RULE_SETS
+from repro.launch.dryrun import collective_bytes
+from repro.launch.specs import build_program
+
+# runs on the plain 1-device CPU test env (meshes below are (1,1))
+
+
+def _mesh():
+    # single-device mesh with both axis names: exercises the full path
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+SMALL_SHAPES = {
+    "train": InputShape("train_small", 64, 4, "train"),
+    "prefill": InputShape("prefill_small", 64, 2, "prefill"),
+    "decode": InputShape("decode_small", 64, 4, "decode"),
+}
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mixtral-8x7b", "zamba2-2.7b",
+                                  "llama-3.2-vision-90b"])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_build_and_compile_small(arch, kind):
+    mesh = _mesh()
+    cfg = get_reduced_config(arch)
+    fn, args, rcfg, jit_kwargs = build_program(
+        arch, SMALL_SHAPES[kind], mesh, RULE_SETS["megatron"], base_cfg=cfg)
+    with mesh:
+        compiled = jax.jit(fn, **jit_kwargs).lower(*args).compile()
+    mem = compiled.memory_analysis()
+    assert mem.temp_size_in_bytes >= 0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    assert ca.get("flops", 0) > 0
+
+
+def test_collective_parser():
+    hlo = """
+  %x = bf16[16,512]{1,0} all-reduce(%a), replica_groups={}
+  %y = (f32[8,8]{1,0}, f32[4]{0}) all-gather(%b, %c)
+  %z = f32[128]{0} reduce-scatter(%d)
+  %w = bf16[2,2]{1,0} all-to-all(%e)
+  %p = s32[10]{0} collective-permute(%f)
+  %n = f32[99]{0} add(%g, %h)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 16 * 512 * 2 * 2.0   # 2x wire factor
+    assert got["all-gather"] == (64 + 4) * 4
+    assert got["reduce-scatter"] == 128 * 4
+    assert got["all-to-all"] == 2 * 2 * 2
+    assert got["collective-permute"] == 10 * 4
+
+
+def test_train_step_executes_on_small_mesh():
+    """The built train program actually RUNS (not just compiles) on the
+    1-device mesh with real arrays, and the loss is finite."""
+    from repro.models import model as M
+    mesh = _mesh()
+    cfg = get_reduced_config("qwen3-4b")
+    shape = SMALL_SHAPES["train"]
+    fn, args, rcfg, jit_kwargs = build_program(
+        "qwen3-4b", shape, mesh, RULE_SETS["megatron"], base_cfg=cfg)
+    params_sds, opt_sds, step_sds, batch_sds = args
+    key = jax.random.PRNGKey(0)
+    params = jax.tree.map(
+        lambda s: 0.02 * jax.random.normal(key, s.shape, s.dtype)
+        if jnp.issubdtype(s.dtype, jnp.floating)
+        else jnp.zeros(s.shape, s.dtype), params_sds)
+    opt_state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), opt_sds)
+    rng = np.random.default_rng(0)
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, rcfg.vocab_size, (b, s + 1)),
+                              jnp.int32),
+        "behavior_logprob": jnp.full((b, s), -np.log(rcfg.vocab_size),
+                                     jnp.float32),
+        "reward": jnp.asarray(rng.normal(0, 1, (b, s)), jnp.float32),
+        "done": jnp.zeros((b, s), bool).at[:, -1].set(True),
+    }
+    with mesh:
+        out = jax.jit(fn, **jit_kwargs)(params, opt_state, jnp.int32(0),
+                                        batch)
+    _, _, metrics = out
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+
+def test_long_context_override_is_windowed_attention():
+    """resolve_config's long_500k variant for full-attention archs must
+    equal sliding-window attention with the configured window (same
+    params, swapped mixer kind)."""
+    import dataclasses
+    import jax.numpy as jnp
+    from repro.launch.specs import resolve_config
+    from repro.configs import get_reduced_config
+    from repro.models import model as M
+
+    base = get_reduced_config("qwen3-4b")
+    # mimic the override at reduced scale
+    lc = dataclasses.replace(
+        base, block_pattern=(("swa_attn", "swiglu"),),
+        sliding_window=base.long_context_window)  # = 64 reduced
+    params, _ = M.init(jax.random.PRNGKey(0), base)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 48), 0,
+                                base.vocab_size)
+    # same params work for both (identical param structure)
+    full, _, _ = M.apply_lm(params, tokens, cfg=base)
+    win, _, _ = M.apply_lm(params, tokens, cfg=lc)
+    # within the window (48 < 64) they agree exactly
+    np.testing.assert_allclose(np.asarray(full), np.asarray(win),
+                               rtol=2e-4, atol=2e-4)
+    # beyond the window they must differ (the window is real)
+    lc_small = dataclasses.replace(lc, sliding_window=16)
+    win2, _, _ = M.apply_lm(params, tokens, cfg=lc_small)
+    assert float(jnp.abs(full - win2).max()) > 1e-4
+
+
+def test_resolve_config_long_override_applies():
+    from repro.launch.specs import resolve_config
+    cfg = resolve_config("qwen3-32b", "long_500k")
+    assert all(m == "swa_attn" for m, _ in cfg.block_pattern)
+    assert cfg.sliding_window == cfg.long_context_window
+    # native sub-quadratic archs keep their pattern
+    cfg2 = resolve_config("zamba2-2.7b", "long_500k")
+    assert all(m == "mamba" for m, _ in cfg2.block_pattern)
+
+
+def test_multihost_cli_single_host_dryrun(capsys):
+    from repro.launch import multihost
+    multihost.main(["--mode", "dryrun", "--arch", "xlstm-125m",
+                    "--shape", "decode_32k"])
+    out = capsys.readouterr().out
+    assert "compiled xlstm-125m/decode_32k" in out

@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each assigned family runs one forward and one IMPALA train step on CPU,
+asserting output shapes and finiteness; plus prefill+decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_reduced_config
+from repro.configs.base import TrainConfig
+from repro.core import learner as learner_lib
+from repro.models import model as M
+from repro.optim import make_optimizer
+
+
+def _inputs(cfg, key, b=2, s=16):
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    vision = None
+    if cfg.vision_seq:
+        vision = jax.random.normal(key, (b, cfg.vision_seq, cfg.d_model),
+                                   jnp.float32)
+    return tokens, vision
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_counts(arch):
+    """The full (published) config is registered with the exact assigned
+    numbers; params are in a sane range (exercised via dry-run only)."""
+    cfg = get_config(arch)
+    assert cfg.num_layers >= 12
+    assert cfg.param_count() > 50e6
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch):
+    cfg = get_reduced_config(arch)
+    assert cfg.d_model <= 512 and cfg.num_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params, axes = M.init(key, cfg)
+    tokens, vision = _inputs(cfg, key)
+    logits, baseline, aux = jax.jit(
+        lambda p, t, v: M.apply_lm(p, t, cfg=cfg, vision=v))(
+        params, tokens, vision)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert baseline.shape == (2, 16)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(baseline).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_reduced_config(arch)
+    tc = TrainConfig(optimizer="adamw", learning_rate=1e-3, grad_clip=1.0,
+                     lr_schedule="constant")
+    key = jax.random.PRNGKey(1)
+    params, _ = M.init(key, cfg)
+    opt = make_optimizer(tc)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(learner_lib.make_lm_train_step(cfg, opt, tc,
+                                                     loss_chunk=16))
+    b, s = 2, 16
+    tokens = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    batch = {
+        "tokens": tokens,
+        "behavior_logprob": jnp.full((b, s), -np.log(cfg.vocab_size)),
+        "reward": jax.random.normal(key, (b, s)),
+        "done": jnp.zeros((b, s), bool).at[:, -1].set(True),
+    }
+    if cfg.vision_seq:
+        batch["vision"] = jax.random.normal(
+            key, (b, cfg.vision_seq, cfg.d_model), jnp.float32)
+    params2, opt_state, m = step_fn(params, opt_state, jnp.int32(0), batch)
+    assert bool(jnp.isfinite(m["loss"]))
+    # parameters actually moved
+    moved = jax.tree.reduce(
+        lambda a, x: a + float(jnp.sum(jnp.abs(x))),
+        jax.tree.map(lambda a, b_: a - b_, params, params2), 0.0)
+    assert moved > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_reduced_config(arch)
+    key = jax.random.PRNGKey(2)
+    params, _ = M.init(key, cfg)
+    b, s = 2, 15
+    tokens, vision = _inputs(cfg, key, b, s + 1)
+    full, _, _ = M.apply_lm(params, tokens, cfg=cfg, vision=vision)
+    _, _, cache = M.prefill(params, tokens[:, :s], cfg=cfg, vision=vision,
+                            cache_seq_len=s + 4)
+    dec, _, _ = M.serve_step(params, tokens[:, s:s + 1], cache,
+                             jnp.int32(s), cfg=cfg)
+    np.testing.assert_allclose(full[:, s], dec[:, 0], rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-27b", "mixtral-8x7b"])
+def test_sliding_window_ring_buffer(arch):
+    """Decode far past the window: ring-buffer cache must agree with the
+    full forward pass (windowed attention)."""
+    cfg = get_reduced_config(arch)  # window = 32
+    key = jax.random.PRNGKey(3)
+    params, _ = M.init(key, cfg)
+    b, prefix, extra = 1, 47, 4
+    total = prefix + extra
+    tokens = jax.random.randint(key, (b, total + 1), 0, cfg.vocab_size)
+    full, _, _ = M.apply_lm(params, tokens, cfg=cfg)
+    _, _, cache = M.prefill(params, tokens[:, :prefix], cfg=cfg,
+                            cache_seq_len=total + 1)
+    for i in range(extra + 1):
+        dec, _, cache = M.serve_step(params, tokens[:, prefix + i:
+                                                    prefix + i + 1],
+                                     cache, jnp.int32(prefix + i), cfg=cfg)
+        np.testing.assert_allclose(full[:, prefix + i], dec[:, 0],
+                                   rtol=3e-3, atol=3e-3)

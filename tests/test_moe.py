@@ -1,0 +1,85 @@
+"""MoE routing invariants and dispatch correctness."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.configs import get_reduced_config
+from repro.models import moe
+from repro.models.common import split_params
+
+
+def _cfg(**over):
+    return dataclasses.replace(get_reduced_config("mixtral-8x7b"), **over)
+
+
+def _params(cfg, key=0):
+    return split_params(moe.moe_init(jax.random.PRNGKey(key), cfg))[0]
+
+
+def test_output_matches_dense_expert_computation():
+    """With ample capacity, the dispatch/combine einsums must equal the
+    naive per-token top-k expert mixture."""
+    cfg = _cfg(capacity_factor=8.0)
+    params = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    out, aux = moe.moe_apply(params, x, cfg)
+    assert float(aux.dropped_frac) == 0.0
+
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    topp, topi = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    topp = topp / topp.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xt)
+    for e in range(cfg.num_experts):
+        h = xt @ params["wi"][e]
+        g = xt @ params["wg"][e]
+        eo = (h * jax.nn.silu(g)) @ params["wo"][e]
+        w = jnp.where(topi == e, topp, 0.0).sum(-1)
+        ref = ref + w[:, None] * eo
+    np.testing.assert_allclose(out.reshape(-1, cfg.d_model), ref,
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_capacity_drops_tokens():
+    cfg = _cfg(capacity_factor=0.25)
+    params = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 64, cfg.d_model))
+    out, aux = moe.moe_apply(params, x, cfg)
+    assert float(aux.dropped_frac) > 0.0
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_load_balance_loss_uniform_is_one():
+    """With perfectly uniform routing, the Switch load-balance loss -> 1."""
+    cfg = _cfg(num_experts=4, num_experts_per_tok=1)
+    params = _params(cfg)
+    # zero router weights => uniform probs; top-1 tie-broken by index, so
+    # ce is deterministic; lb = E * sum(me*ce)/k = 4 * (0.25*1)/1 ... only
+    # me is uniform. Check lb >= 1 (its minimum, attained at balance).
+    params = dict(params, router=jnp.zeros_like(params["router"]))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model))
+    _, aux = moe.moe_apply(params, x, cfg)
+    assert float(aux.load_balance) >= 1.0 - 1e-5
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 1000), b=st.sampled_from([1, 2, 4]))
+def test_router_gradients_finite(seed, b):
+    cfg = _cfg()
+    params = _params(cfg, key=seed % 7)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, 32, cfg.d_model))
+
+    def loss(p):
+        out, aux = moe.moe_apply(p, x, cfg)
+        return jnp.sum(jnp.square(out)) + aux.load_balance + aux.z_loss
+
+    g = jax.grad(loss)(params)
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.isfinite(leaf).all())

@@ -1,0 +1,189 @@
+"""Substrate tests: envs (hypothesis invariants), optimizers, checkpoint,
+sharding rules, data pipeline."""
+
+import os
+import tempfile
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro import checkpoint as ckpt
+from repro.data import PackedBatchIterator, markov_corpus, rl_episode_batch
+from repro.envs import catch, gridworld, token_mdp
+from repro.optim import adamw, apply_updates, clip_by_global_norm, rmsprop, sgd
+
+
+# ---------------------------------------------------------------------------
+# envs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mk", [catch.make, gridworld.make,
+                                lambda: token_mdp.make(64)])
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**20), steps=st.integers(1, 40))
+def test_env_invariants(mk, seed, steps):
+    env = mk()
+    key = jax.random.PRNGKey(seed)
+    state, obs = env.reset(key)
+    assert obs.shape == env.obs_shape
+    step = jax.jit(env.step)
+    for i in range(steps):
+        key, ka, ks = jax.random.split(key, 3)
+        action = jax.random.randint(ka, (), 0, env.num_actions)
+        state, obs, reward, done = step(state, action, ks)
+        assert obs.shape == env.obs_shape
+        assert bool(jnp.isfinite(reward))
+        assert reward.dtype == jnp.float32
+
+
+def test_catch_optimal_policy_always_wins():
+    """Moving the paddle toward the ball catches every episode."""
+    env = catch.make()
+    key = jax.random.PRNGKey(0)
+    state, obs = env.reset(key)
+    total, episodes = 0.0, 0
+    for i in range(200):
+        # locate ball and paddle from the observation
+        grid = np.asarray(obs[..., 0])
+        ball = np.argwhere(grid[:-1] > 0)       # (k, 2): row, col
+        paddle = np.argwhere(grid[-1] > 0)      # (k, 1): col
+        if len(ball) and len(paddle):
+            dx = int(np.sign(ball[0][1] - paddle[0][0]))
+        else:
+            dx = 0
+        key, ks = jax.random.split(key)
+        state, obs, reward, done = env.step(state, jnp.int32(dx + 1), ks)
+        if bool(done):
+            episodes += 1
+            total += float(reward)
+    assert episodes > 10
+    assert total == episodes  # every episode caught
+
+
+def test_token_mdp_reward_rule():
+    env = token_mdp.make(32, a=5, b=3)
+    key = jax.random.PRNGKey(0)
+    state, obs = env.reset(key)
+    correct = (5 * int(obs) + 3) % 32
+    state, obs2, r, done = env.step(state, jnp.int32(correct), key)
+    assert float(r) == 1.0
+    state, _, r2, _ = env.step(state, jnp.int32((int(obs2) * 5 + 4) % 32),
+                               key)
+    assert float(r2) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opt", [
+    sgd(0.1), rmsprop(0.1, grad_clip=5.0), adamw(0.05, grad_clip=None)])
+def test_optimizer_decreases_quadratic(opt):
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"])) + jnp.square(p["b"])
+
+    l0 = float(loss(params))
+    for step in range(60):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, jnp.int32(step))
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": [{"m": jnp.ones(4)}], "step": jnp.int32(7)}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "step_7.npz")
+        ckpt.save(path, tree, {"step": 7})
+        restored, meta = ckpt.restore(path, tree)
+        assert meta["step"] == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert ckpt.latest_step_path(d) == path
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    tree = {"w": jnp.ones((2, 2))}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "c.npz")
+        ckpt.save(path, tree)
+        with pytest.raises(ValueError):
+            ckpt.restore(path, {"w": jnp.ones((3, 3))})
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_spec_for_divisibility_and_fallback():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import MEGATRON_RULES, spec_for
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    # trivially divisible on a 1-way mesh
+    assert spec_for(("embed", "heads"), mesh, MEGATRON_RULES,
+                    (64, 8)) == P(None, "model")
+
+
+def test_zero1_adds_data_axis():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import MEGATRON_RULES, zero1_shardings
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    axes = {"w": ("embed", "mlp")}
+    shapes = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
+    sh = zero1_shardings(axes, shapes, mesh, MEGATRON_RULES)
+    assert sh["w"].spec == P("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_markov_corpus_learnable_structure():
+    c = markov_corpus(64, 5000, seed=0, branching=2)
+    assert c.min() >= 0 and c.max() < 64
+    # branching=2 => each token has at most 2 successors
+    succ = {}
+    for a, b in zip(c[:-1], c[1:]):
+        succ.setdefault(int(a), set()).add(int(b))
+    assert max(len(v) for v in succ.values()) <= 2
+
+
+def test_packed_iterator_shapes():
+    it = PackedBatchIterator(markov_corpus(32, 2000), batch_size=4,
+                             seq_len=16)
+    try:
+        b = next(it)
+        assert b["tokens"].shape == (4, 17)
+        assert b["tokens"].dtype == np.int32
+    finally:
+        it.close()
+
+
+def test_rl_episode_batch_rewards_match_rule():
+    rng = np.random.default_rng(0)
+    b = rl_episode_batch(rng, 4, 8, 32, a=5, b=3)
+    target = (5 * b["tokens"][:, :-1] + 3) % 32
+    np.testing.assert_array_equal(
+        b["reward"], (b["tokens"][:, 1:] == target).astype(np.float32))
+    assert b["done"][:, -1].all()

@@ -1,0 +1,143 @@
+"""V-trace correctness: reference equality, IMPALA-paper properties, and
+the Pallas kernel path."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core.vtrace import (vtrace_from_importance_weights,
+                               vtrace_from_logits)
+from repro.kernels import ops
+
+
+def ref_vtrace(log_rhos, discounts, rewards, values, bootstrap,
+               rho_clip=1.0, c_clip=1.0):
+    T, B = log_rhos.shape
+    rhos = np.exp(log_rhos)
+    crho = np.minimum(rho_clip, rhos)
+    cs = np.minimum(c_clip, rhos)
+    vtp1 = np.concatenate([values[1:], bootstrap[None]], 0)
+    deltas = crho * (rewards + discounts * vtp1 - values)
+    vs = np.zeros_like(values)
+    acc = np.zeros(B, np.float64)
+    for t in reversed(range(T)):
+        acc = deltas[t] + discounts[t] * cs[t] * acc
+        vs[t] = values[t] + acc
+    vs_tp1 = np.concatenate([vs[1:], bootstrap[None]], 0)
+    pg = crho * (rewards + discounts * vs_tp1 - values)
+    return vs, pg
+
+
+def _rand(rng, t, b):
+    return (rng.normal(0, 1, (t, b)).astype(np.float32),
+            (rng.random((t, b)) > 0.2).astype(np.float32) * 0.97,
+            rng.normal(0, 1, (t, b)).astype(np.float32),
+            rng.normal(0, 1, (t, b)).astype(np.float32),
+            rng.normal(0, 1, (b,)).astype(np.float32))
+
+
+def test_matches_reference():
+    rng = np.random.default_rng(0)
+    args = _rand(rng, 13, 9)
+    vs_r, pg_r = ref_vtrace(*args)
+    out = vtrace_from_importance_weights(*map(jnp.asarray, args))
+    np.testing.assert_allclose(out.vs, vs_r, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(out.pg_advantages, pg_r, rtol=2e-5, atol=2e-5)
+
+
+def test_on_policy_reduces_to_discounted_returns():
+    """IMPALA §4.1: with rho == c == 1 (on-policy), vs is the n-step
+    bootstrapped return."""
+    rng = np.random.default_rng(1)
+    _, disc, rew, val, boot = _rand(rng, 17, 5)
+    lr = np.zeros((17, 5), np.float32)
+    out = vtrace_from_importance_weights(lr, disc, rew, val, boot)
+    ret = boot.copy()
+    rets = np.zeros_like(val)
+    for t in reversed(range(17)):
+        ret = rew[t] + disc[t] * ret
+        rets[t] = ret
+    np.testing.assert_allclose(out.vs, rets, rtol=2e-5, atol=2e-5)
+
+
+def test_zero_discount_gives_one_step():
+    """With gamma = 0, vs_t = V_t + rho_t (r_t - V_t) exactly."""
+    rng = np.random.default_rng(2)
+    lr, _, rew, val, boot = _rand(rng, 7, 3)
+    disc = np.zeros_like(rew)
+    out = vtrace_from_importance_weights(lr, disc, rew, val, boot)
+    crho = np.minimum(1.0, np.exp(lr))
+    np.testing.assert_allclose(out.vs, val + crho * (rew - val),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(deadline=None, max_examples=25)
+@given(t=st.integers(2, 30), b=st.integers(1, 8),
+       seed=st.integers(0, 2**16), rho_clip=st.floats(0.5, 4.0))
+def test_clipping_property(t, b, seed, rho_clip):
+    """vs is bounded when rhos explode (the point of the clipping), and
+    increasing clip only changes vs where rho exceeds it."""
+    rng = np.random.default_rng(seed)
+    lr, disc, rew, val, boot = _rand(rng, t, b)
+    lr = lr * 5.0  # extreme off-policiness
+    out = vtrace_from_importance_weights(
+        jnp.asarray(lr), jnp.asarray(disc), jnp.asarray(rew),
+        jnp.asarray(val), jnp.asarray(boot),
+        clip_rho_threshold=rho_clip, clip_c_threshold=1.0)
+    assert np.isfinite(np.asarray(out.vs)).all()
+    bound = np.abs(val).max() + rho_clip * (
+        np.abs(rew) + 0.97 * (np.abs(val).max() + np.abs(boot).max())
+        + np.abs(val).max()).max() * t
+    assert np.abs(np.asarray(out.vs)).max() <= bound
+
+
+def test_from_logits_matches_manual_logprobs():
+    rng = np.random.default_rng(3)
+    t, b, a = 9, 4, 6
+    bl = rng.normal(0, 1, (t, b, a)).astype(np.float32)
+    tl = rng.normal(0, 1, (t, b, a)).astype(np.float32)
+    actions = rng.integers(0, a, (t, b))
+    _, disc, rew, val, boot = _rand(rng, t, b)
+    out = vtrace_from_logits(jnp.asarray(bl), jnp.asarray(tl),
+                             jnp.asarray(actions), jnp.asarray(disc),
+                             jnp.asarray(rew), jnp.asarray(val),
+                             jnp.asarray(boot))
+
+    def lp(logits):
+        x = logits - logits.max(-1, keepdims=True)
+        x = x - np.log(np.exp(x).sum(-1, keepdims=True))
+        return np.take_along_axis(x, actions[..., None], -1)[..., 0]
+
+    vs_r, pg_r = ref_vtrace(lp(tl) - lp(bl), disc, rew, val, boot)
+    np.testing.assert_allclose(out.vs, vs_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(out.pg_advantages, pg_r, rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_path_matches_scan():
+    rng = np.random.default_rng(4)
+    args = _rand(rng, 23, 64)
+    a = vtrace_from_importance_weights(*map(jnp.asarray, args))
+    b = ops.vtrace_from_importance_weights_kernel(*map(jnp.asarray, args),
+                                                  interpret=True)
+    np.testing.assert_allclose(a.vs, b.vs, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(a.pg_advantages, b.pg_advantages,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_targets_carry_no_gradient():
+    rng = np.random.default_rng(5)
+    args = _rand(rng, 5, 3)
+
+    def f(values):
+        out = vtrace_from_importance_weights(
+            jnp.asarray(args[0]), jnp.asarray(args[1]), jnp.asarray(args[2]),
+            values, jnp.asarray(args[4]))
+        return jnp.sum(out.vs) + jnp.sum(out.pg_advantages)
+
+    g = jax.grad(f)(jnp.asarray(args[3]))
+    np.testing.assert_allclose(g, np.zeros_like(args[3]))
