@@ -126,6 +126,56 @@ def bench_fps_on_device(steps=30):
     row("fps_on_device_catch", dt / steps * 1e6, f"{frames/dt:.0f}fps")
 
 
+def bench_pipeline(steps=60, repeats=3):
+    """Synchronous vs double-buffered rollout-learn overlap (the Runtime's
+    pipelined DeviceSource): same unroll + learner step, with and without
+    one-step-lag double buffering."""
+    from repro.configs.atari_impala import small_train
+    from repro.core import learner as L
+    from repro.core.sources import DeviceSource
+    from repro.envs import catch, gridworld
+    from repro.models.convnet import init_agent, minatar_net
+    from repro.optim import make_optimizer
+
+    for env_name, env_mod in (("catch", catch), ("gridworld", gridworld)):
+        env = env_mod.make()
+        tc = small_train(unroll_length=20, batch_size=32)
+        init_fn, apply_fn = minatar_net(env.obs_shape, env.num_actions)
+        params0, _ = init_agent(init_fn, jax.random.PRNGKey(0))
+        opt = make_optimizer(tc)
+        step_fn = jax.jit(L.make_train_step(apply_fn, opt, tc))
+        fps = {}
+        for pipelined in (False, True):
+            best = 0.0
+            for rep in range(repeats):
+                source = DeviceSource.for_env(
+                    env, apply_fn, unroll_length=tc.unroll_length,
+                    batch_size=tc.batch_size, key=jax.random.PRNGKey(1),
+                    pipelined=pipelined)
+                params, opt_state = params0, opt.init(params0)
+                m = None
+                for s in range(5):  # warmup: compile unroll + learner step
+                    batch = source.next_batch(params)
+                    params, opt_state, m = step_fn(params, opt_state,
+                                                   jnp.int32(s), batch)
+                jax.block_until_ready(m["loss"])
+                t0 = time.perf_counter()
+                for s in range(steps):
+                    batch = source.next_batch(params)
+                    params, opt_state, m = step_fn(
+                        params, opt_state, jnp.int32(5 + s), batch)
+                jax.block_until_ready(m["loss"])
+                dt = time.perf_counter() - t0
+                best = max(best, steps * source.frames_per_batch / dt)
+            mode = "pipelined" if pipelined else "sync"
+            fps[mode] = best
+            row(f"pipeline_{mode}_{env_name}",
+                steps * tc.unroll_length * tc.batch_size / best * 1e6 / steps,
+                f"{best:.0f}fps")
+        row(f"pipeline_speedup_{env_name}", 0.0,
+            f"{fps['pipelined'] / fps['sync']:.3f}x")
+
+
 def bench_fps_host_loop(duration=6.0):
     """MonoBeast/PolyBeast host actor loop throughput (§4 FPS analogue)."""
     from repro.configs.atari_impala import small_train
@@ -266,17 +316,33 @@ def roofline_table():
               f"{d['memory']['per_device_total']/2**30:.2f}")
 
 
-def main() -> None:
+_SUITES = {
+    "vtrace": bench_vtrace,
+    "learner": bench_learner_step,
+    "fps": bench_fps_on_device,
+    "pipeline": bench_pipeline,
+    "host_loop": bench_fps_host_loop,
+    "batcher": bench_dynamic_batcher,
+    "attention": bench_attention,
+    "generate": bench_generate,
+    "ssd": bench_ssd_chunk,
+    "roofline": roofline_table,
+}
+
+
+def main(argv=None) -> None:
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--suite", choices=["all"] + sorted(_SUITES),
+                   default="all", help="run one benchmark suite (default: "
+                                       "everything)")
+    args = p.parse_args(argv)
     print("name,us_per_call,derived")
-    bench_vtrace()
-    bench_learner_step()
-    bench_fps_on_device()
-    bench_fps_host_loop()
-    bench_dynamic_batcher()
-    bench_attention()
-    bench_generate()
-    bench_ssd_chunk()
-    roofline_table()
+    if args.suite == "all":
+        for fn in _SUITES.values():
+            fn()
+    else:
+        _SUITES[args.suite]()
 
 
 if __name__ == "__main__":

@@ -1,27 +1,24 @@
-"""Quickstart: MonoBeast-style IMPALA on Catch, end to end, on CPU.
+"""Quickstart: MonoBeast-style IMPALA on Catch, end to end, on CPU —
+both actor architectures running through the same unified ``Runtime``
+(core/runtime.py):
 
-Runs BOTH actor architectures against the same learner:
-  1. the host loop (actor threads + DynamicBatcher + BatchingQueue) — the
-     paper's MonoBeast/PolyBeast design, for envs that cannot be compiled;
-  2. the on-device compiled rollout (the TPU-native adaptation) for the
-     actual training run — reward reaches the optimum (+0.1/step) in
-     ~1 minute on CPU.
+  1. ``HostLoopSource`` — actor threads + DynamicBatcher (inference queue)
+     + BatchingQueue (learner queue): the paper's MonoBeast/PolyBeast
+     design, for envs that cannot be compiled;
+  2. ``DeviceSource`` — the on-device compiled rollout (the TPU-native
+     adaptation) with double-buffered dispatch, for the actual training
+     run — reward reaches the optimum (+0.1/step) in ~1 minute on CPU.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-import time
-
 import jax
-import jax.numpy as jnp
 
 from repro.configs.atari_impala import small_train
 from repro.core import learner as learner_lib
-from repro.core import rollout as rollout_lib
-from repro.core.actor_pool import ActorPool, start_inference_thread
-from repro.core.batcher import BatchingQueue, DynamicBatcher
+from repro.core.runtime import Runtime
+from repro.core.sources import DeviceSource, HostLoopSource
 from repro.envs import catch
-from repro.envs.base import HostEnv
 from repro.models.convnet import init_agent, minatar_net
 from repro.optim import make_optimizer
 
@@ -33,48 +30,29 @@ def main():
     init_fn, apply_fn = minatar_net(env.obs_shape, env.num_actions)
     params, _ = init_agent(init_fn, jax.random.PRNGKey(0))
     opt = make_optimizer(train_cfg)
-    opt_state = opt.init(params)
+    train_step = jax.jit(learner_lib.make_train_step(apply_fn, opt,
+                                                     train_cfg))
 
     # --- 1. host loop smoke: actors -> inference queue -> learner queue ---
-    print("== host-loop (MonoBeast) actors: one learner batch ==")
-    policy = jax.jit(lambda obs: apply_fn(params, obs).policy_logits)
-    inference = DynamicBatcher(max_batch_size=8, timeout_ms=5)
-    learner_queue = BatchingQueue(8, batch_dim=1)
-    pool = ActorPool(lambda seed: HostEnv(env, seed), num_actors=8,
-                     unroll_length=train_cfg.unroll_length,
-                     inference=inference, learner_queue=learner_queue)
-    start_inference_thread(inference, lambda o: policy(jnp.asarray(o)))
-    pool.start()
-    batch = learner_queue.get(timeout=60)
-    print("learner batch:", {k: v.shape for k, v in batch.items()})
-    pool.stop()
+    print("== host-loop (MonoBeast) actors: a few learner steps ==")
+    host = HostLoopSource(env, apply_fn, num_actors=8,
+                          unroll_length=train_cfg.unroll_length,
+                          batch_size=8)
+    Runtime(host, train_step, params, opt.init(params), total_steps=3,
+            log_every=1, log_keys=("reward_per_step", "loss")).run()
 
-    # --- 2. on-device training to convergence ---
-    print("== on-device (compiled) IMPALA training ==")
-    key = jax.random.PRNGKey(1)
-    carry = rollout_lib.env_reset_batch(env, key, train_cfg.batch_size)
-    unroll = rollout_lib.make_unroll(env, apply_fn, train_cfg.unroll_length)
-    train_step = learner_lib.make_train_step(apply_fn, opt, train_cfg)
-
-    @jax.jit
-    def combined(params, opt_state, step, carry, key):
-        carry, ro = unroll(params, carry, key)
-        params, opt_state, m = train_step(params, opt_state, step, ro)
-        return params, opt_state, carry, m
-
-    t0 = time.time()
-    frames = 0
-    for step in range(1500):
-        key, k = jax.random.split(key)
-        params, opt_state, carry, m = combined(
-            params, opt_state, jnp.int32(step), carry, k)
-        frames += train_cfg.batch_size * train_cfg.unroll_length
-        if step % 150 == 0 or step == 1499:
-            print(f"step {step:5d} reward/step="
-                  f"{float(m['reward_per_step']):+.3f} "
-                  f"(optimal +0.100) fps={frames/(time.time()-t0):.0f}")
-    final = float(m["reward_per_step"])
-    print(f"done: reward/step={final:+.3f} "
+    # --- 2. on-device training to convergence (double-buffered) ---
+    print("== on-device (compiled, double-buffered) IMPALA training ==")
+    source = DeviceSource.for_env(
+        env, apply_fn, unroll_length=train_cfg.unroll_length,
+        batch_size=train_cfg.batch_size, key=jax.random.PRNGKey(1),
+        pipelined=True)
+    runtime = Runtime(source, train_step, params, opt.init(params),
+                      total_steps=1500, log_every=150,
+                      log_keys=("reward_per_step",))
+    runtime.run()
+    final = float(runtime.metrics["reward_per_step"])
+    print(f"done: reward/step={final:+.3f} (optimal +0.100) "
           f"({'SOLVED' if final > 0.05 else 'not solved'})")
 
 

@@ -1,6 +1,7 @@
 """V-trace off-policy-correction ablation (the paper's §2 motivation,
 quantified): actors run a LAGGED copy of the policy (as they do in any
-asynchronous IMPALA deployment); the learner either
+asynchronous IMPALA deployment — ``DeviceSource(param_sync_every=lag)``);
+the learner either
 
   * corrected   — V-trace with the true behavior logits (TorchBeast), or
   * uncorrected — pretends the data is on-policy (rho forced to 1).
@@ -14,12 +15,12 @@ biased policy-gradient. Results are recorded in EXPERIMENTS.md §Validation.
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.atari_impala import small_train
 from repro.core import learner as learner_lib
-from repro.core import rollout as rollout_lib
+from repro.core.runtime import Runtime
+from repro.core.sources import DeviceSource
 from repro.envs import catch
 from repro.models.convnet import init_agent, minatar_net
 from repro.optim import make_optimizer
@@ -32,34 +33,30 @@ def run(corrected: bool, lag: int, steps: int, seed: int = 0,
                      total_steps=steps + 1000)
     init_fn, apply_fn = minatar_net(env.obs_shape, env.num_actions)
     params, _ = init_agent(init_fn, jax.random.PRNGKey(seed))
-    behavior_params = params
     opt = make_optimizer(tc)
-    opt_state = opt.init(params)
-    key = jax.random.PRNGKey(seed + 1)
-    carry = rollout_lib.env_reset_batch(env, key, tc.batch_size)
-    unroll = jax.jit(rollout_lib.make_unroll(env, apply_fn,
-                                             tc.unroll_length))
-    train_step = jax.jit(learner_lib.make_train_step(apply_fn, opt, tc))
+
+    # actor weight sync every `lag` learner steps (lag 0 -> every step)
+    source = DeviceSource.for_env(
+        env, apply_fn, unroll_length=tc.unroll_length,
+        batch_size=tc.batch_size, key=jax.random.PRNGKey(seed + 1),
+        pipelined=False, param_sync_every=max(1, lag))
+    train_step = learner_lib.make_train_step(apply_fn, opt, tc)
 
     @jax.jit
-    def fake_onpolicy(params, batch):
+    def uncorrected_step(params, opt_state, step, batch):
         """Overwrite behavior logits with the learner's own — the
         'uncorrected' arm (rho == 1 identically)."""
         out = apply_fn(params, batch["obs"][:-1])
-        return dict(batch, behavior_logits=jax.lax.stop_gradient(
+        batch = dict(batch, behavior_logits=jax.lax.stop_gradient(
             out.policy_logits))
+        return train_step(params, opt_state, step, batch)
 
+    step_fn = jax.jit(train_step) if corrected else uncorrected_step
     rewards = []
-    for step in range(steps):
-        if lag == 0 or step % lag == 0:
-            behavior_params = params           # actor weight sync
-        key, k = jax.random.split(key)
-        carry, batch = unroll(behavior_params, carry, k)
-        if not corrected:
-            batch = fake_onpolicy(params, batch)
-        params, opt_state, m = train_step(params, opt_state,
-                                          jnp.int32(step), batch)
-        rewards.append(float(m["reward_per_step"]))
+    Runtime(source, step_fn, params, opt.init(params), total_steps=steps,
+            log_every=0,
+            on_metrics=lambda s, m: rewards.append(
+                float(m["reward_per_step"]))).run()
     return np.mean(rewards[-100:])
 
 

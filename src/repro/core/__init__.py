@@ -1,4 +1,4 @@
-"""IMPALA core: V-trace, losses, rollouts, queueing, learner (the paper's
-primary contribution)."""
+"""IMPALA core: V-trace, losses, rollouts, queueing, learner, and the
+unified actor/learner runtime (the paper's primary contribution)."""
 from repro.core import (vtrace, losses, rollout, batcher, actor_pool,  # noqa: F401
-                        generate, learner)
+                        generate, learner, sources, runtime)

@@ -41,6 +41,7 @@ class ActorPool:
 
     def _actor_loop(self, idx: int):
         env = self.env_fn(self.seed + idx)
+        rng = np.random.default_rng(self.seed + idx)
         obs = env.reset()
         try:
             while not self._stop.is_set():
@@ -49,10 +50,8 @@ class ActorPool:
                 for _ in range(self.unroll_length):
                     logits = self.inference.compute(
                         np.asarray(obs, np.float32))
-                    # sample on the actor (host) side
-                    u = np.random.default_rng(
-                        abs(hash((idx, self.steps, len(traj["action"]))))
-                        % 2**32).gumbel(size=logits.shape)
+                    # sample on the actor (host) side via Gumbel-max
+                    u = rng.gumbel(size=logits.shape)
                     action = int(np.argmax(logits + u))
                     obs, reward, done, _ = env.step(action)
                     traj["obs"].append(obs)

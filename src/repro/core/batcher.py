@@ -68,12 +68,15 @@ class DynamicBatcher:
         self._closed = False
 
     def close(self):
+        # Snapshot-and-clear under the lock: compute() checks _closed under
+        # the same lock, so no request can slip in after the snapshot, and
+        # a concurrent get_batch() can't pop entries we are about to wake.
         with self._cond:
             self._closed = True
+            pending, self._pending = self._pending, []
             self._cond.notify_all()
-        # unblock all waiting actors
-        for p in self._pending:
-            p.event.set()
+        for p in pending:
+            p.event.set()  # output stays None -> compute() raises Closed
 
     def compute(self, inputs):
         """Called by actor threads; blocks until the consumer responds."""
@@ -104,6 +107,8 @@ class DynamicBatcher:
                     lambda: len(self._pending) >= self.max_batch_size
                     or self._closed,
                     timeout=self.timeout_s)
+            if not self._pending:  # close() snapshotted it mid-wait
+                raise Closed
             batch = self._pending[:self.max_batch_size]
             self._pending = self._pending[self.max_batch_size:]
 

@@ -1,0 +1,331 @@
+"""Pluggable rollout sources — the actor side of the IMPALA split, behind
+one contract (rlpyt/TorchRL-style modular collectors).
+
+Every source produces *canonical time-major rollouts*: a dict pytree with
+
+  obs              (T+1, B, *obs_shape)   observations (obs[T] bootstraps)
+  action           (T, B) int32
+  behavior_logits  (T, B, A) float32      — full-logits agents, or
+  behavior_logprob (T, B) float32         — chosen-action log-probs (LM path)
+  reward           (T, B) float32
+  done             (T, B) bool
+
+exactly the learner-input layout of the paper's §2, so the `Runtime`
+(core/runtime.py) is indifferent to *how* rollouts are produced:
+
+  ``DeviceSource``    — compiled on-device unroll (core/rollout.py), with
+                        optional double-buffered async dispatch: unroll N+1
+                        is dispatched with the params of step N-1 before the
+                        learner consumes unroll N, so acting and learning
+                        overlap at a one-step parameter lag (V-trace corrects
+                        the resulting off-policyness — the IMPALA argument).
+  ``HostLoopSource``  — MonoBeast/PolyBeast host actor threads feeding the
+                        inference queue (DynamicBatcher) and the learner
+                        queue (BatchingQueue).
+  ``GeneratorSource`` — LLM-policy token-MDP episodes via the decode path
+                        (core/generate.py), re-laid-out time-major.
+  ``DataSource``      — any iterator of ready batches (LM pretraining).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, Optional, Protocol, \
+    runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@runtime_checkable
+class RolloutSource(Protocol):
+    """The contract the Runtime consumes.
+
+    ``next_batch(params)`` hands the source the learner's *current*
+    parameters and returns one rollout batch. Sources are free to act with
+    lagged parameters (that is the point of the decoupled architecture);
+    the rollout's behavior outputs must describe the policy that actually
+    produced it.
+    """
+
+    frames_per_batch: int
+
+    def start(self, params) -> None: ...
+
+    def next_batch(self, params) -> Dict[str, Any]: ...
+
+    def stop(self) -> None: ...
+
+
+def check_rollout(rollout: Dict[str, Any], unroll_length: int,
+                  batch_size: int) -> None:
+    """Assert the canonical time-major contract (used by tests and as the
+    executable spec of the layout above)."""
+    t, b = unroll_length, batch_size
+    assert rollout["obs"].shape[:2] == (t + 1, b), rollout["obs"].shape
+    assert rollout["action"].shape == (t, b)
+    assert rollout["action"].dtype == jnp.int32
+    assert rollout["reward"].shape == (t, b)
+    assert rollout["reward"].dtype == jnp.float32
+    assert rollout["done"].shape == (t, b)
+    assert rollout["done"].dtype == jnp.bool_
+    assert ("behavior_logits" in rollout) != ("behavior_logprob" in rollout)
+    if "behavior_logits" in rollout:
+        assert rollout["behavior_logits"].shape[:2] == (t, b)
+        assert rollout["behavior_logits"].dtype == jnp.float32
+    else:
+        assert rollout["behavior_logprob"].shape == (t, b)
+        assert rollout["behavior_logprob"].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Compiled on-device actors
+
+
+class DeviceSource:
+    """Compiled-unroll source with optional double-buffered dispatch.
+
+    Synchronous (``pipelined=False``): ``next_batch(params)`` dispatches one
+    unroll with the given params and returns it — unroll N sees the params
+    of step N.
+
+    Double-buffered (``pipelined=True``): one unroll is always in flight.
+    ``next_batch(params)`` returns the previously dispatched unroll and
+    immediately dispatches the next one, so from step 1 onward the consumed
+    rollout was generated with the params of the *previous* learner step
+    (parameter lag 1) and the device can execute it while the host is busy
+    with the learner step. JAX's async dispatch plus carry donation make
+    this a true overlap without threads. With frozen params both modes
+    produce bit-identical rollout streams (same key-split sequence).
+
+    ``param_sync_every=k`` refreshes the behavior params only every k-th
+    dispatch — the actor-lag knob used by examples/vtrace_ablation.py.
+    """
+
+    def __init__(self, unroll: Callable, carry, key, *,
+                 unroll_length: int, batch_size: int,
+                 pipelined: bool = True, param_sync_every: int = 1,
+                 donate: Optional[bool] = None):
+        if donate is None:  # buffer donation is a no-op (and noisy) on CPU
+            donate = jax.default_backend() != "cpu"
+        self._unroll = jax.jit(unroll, donate_argnums=(1,) if donate else ())
+        self._carry = carry
+        self._key = key
+        self.unroll_length = unroll_length
+        self.batch_size = batch_size
+        self.frames_per_batch = unroll_length * batch_size
+        self.pipelined = pipelined
+        self.param_sync_every = max(1, param_sync_every)
+        self._behavior_params = None
+        self._dispatches = 0
+        self._pending = None
+
+    @classmethod
+    def for_env(cls, env, apply_fn, *, unroll_length: int, batch_size: int,
+                key, **kwargs) -> "DeviceSource":
+        """Build the feed-forward-agent source from an Env + apply_fn."""
+        from repro.core import rollout as rollout_lib
+        key, k_reset = jax.random.split(key)
+        carry = rollout_lib.env_reset_batch(env, k_reset, batch_size)
+        unroll = rollout_lib.make_unroll(env, apply_fn, unroll_length)
+        return cls(unroll, carry, key, unroll_length=unroll_length,
+                   batch_size=batch_size, **kwargs)
+
+    def _dispatch(self, params):
+        if self._dispatches % self.param_sync_every == 0:
+            self._behavior_params = params
+        self._dispatches += 1
+        self._key, k = jax.random.split(self._key)
+        self._carry, rollout = self._unroll(self._behavior_params,
+                                            self._carry, k)
+        return rollout
+
+    def start(self, params) -> None:
+        del params  # first dispatch happens lazily in next_batch
+
+    def next_batch(self, params):
+        if not self.pipelined:
+            return self._dispatch(params)
+        if self._pending is None:
+            self._pending = self._dispatch(params)
+        rollout, self._pending = self._pending, self._dispatch(params)
+        return rollout
+
+    def stop(self) -> None:
+        self._pending = None
+
+
+# ---------------------------------------------------------------------------
+# Host-loop (MonoBeast/PolyBeast) actors
+
+
+class HostLoopSource:
+    """Actor threads + inference queue + learner queue behind the contract.
+
+    ``next_batch(params)`` publishes the new params to the inference thread
+    (actors pick them up on their next policy evaluation — the natural
+    asynchronous parameter lag of the host architecture) and blocks until
+    the learner queue yields a stacked batch.
+    """
+
+    def __init__(self, env, apply_fn, *, num_actors: int,
+                 unroll_length: int, batch_size: int, seed: int = 0,
+                 inference_batch: Optional[int] = None,
+                 inference_timeout_ms: float = 5.0, max_items: int = 128,
+                 batch_timeout_s: float = 60.0):
+        self._env = env
+        self._apply_fn = apply_fn
+        self.num_actors = num_actors
+        self.unroll_length = unroll_length
+        self.batch_size = batch_size
+        self.frames_per_batch = unroll_length * batch_size
+        self.seed = seed
+        self._inference_batch = inference_batch or num_actors
+        self._inference_timeout_ms = inference_timeout_ms
+        self._max_items = max_items
+        self._batch_timeout_s = batch_timeout_s
+        self._params = None
+        self._pool = None
+
+    def start(self, params) -> None:
+        from repro.core.actor_pool import ActorPool, start_inference_thread
+        from repro.core.batcher import BatchingQueue, DynamicBatcher
+        from repro.envs.base import HostEnv
+
+        self._params = params
+        policy = jax.jit(
+            lambda p, obs: self._apply_fn(p, obs).policy_logits)
+        self.inference = DynamicBatcher(
+            max_batch_size=self._inference_batch,
+            timeout_ms=self._inference_timeout_ms)
+        self.learner_queue = BatchingQueue(
+            self.batch_size, batch_dim=1, max_items=self._max_items)
+        self._pool = ActorPool(
+            lambda seed: HostEnv(self._env, seed), self.num_actors,
+            self.unroll_length, self.inference, self.learner_queue,
+            seed=self.seed)
+        start_inference_thread(
+            self.inference,
+            lambda obs: np.asarray(policy(self._params, jnp.asarray(obs))))
+        self._pool.start()
+
+    def next_batch(self, params):
+        if self._pool is None:
+            self.start(params)
+        self._params = params
+        batch = self.learner_queue.get(timeout=self._batch_timeout_s)
+        if batch is None:
+            raise TimeoutError(
+                f"no learner batch within {self._batch_timeout_s}s "
+                f"({self.num_actors} actors, queue "
+                f"size {self.learner_queue.size()})")
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+
+    def stop(self) -> None:
+        if self._pool is not None:
+            self._pool.stop()
+            self._pool = None
+
+
+# ---------------------------------------------------------------------------
+# LLM-policy token-MDP actors (DESIGN.md §2)
+
+
+def token_task_reward(tokens, vocab_size: int, a_mod: int = 5,
+                      b_mod: int = 3):
+    """The synthetic token-MDP reward: +1 when token t+1 equals the affine
+    target (a*token_t + b) mod V. tokens (B, S+1) -> reward (B, S)."""
+    target = (a_mod * tokens[:, :-1] + b_mod) % vocab_size
+    return (tokens[:, 1:] == target).astype(jnp.float32)
+
+
+class GeneratorSource:
+    """Episodes from the autoregressive decode path: the LM *is* the policy,
+    tokens are actions, and the recorded sampling log-probs are the behavior
+    policy outputs V-trace needs. Emitted time-major per the contract
+    (obs[t] is the token consumed at step t; action[t] == obs[t+1])."""
+
+    def __init__(self, cfg, *, batch_size: int, episode_length: int, key,
+                 reward_fn: Optional[Callable] = None,
+                 temperature: float = 1.0):
+        self._cfg = cfg
+        self.batch_size = batch_size
+        self.episode_length = episode_length
+        self.frames_per_batch = batch_size * episode_length
+        self._key = key
+        self._reward_fn = reward_fn or (
+            lambda toks: token_task_reward(toks, cfg.vocab_size))
+        self._temperature = temperature
+
+    def start(self, params) -> None:
+        del params
+
+    def next_batch(self, params):
+        from repro.core import generate as gen_lib
+        b, t = self.batch_size, self.episode_length
+        self._key, k_prompt, k_gen = jax.random.split(self._key, 3)
+        prompt = jax.random.randint(k_prompt, (b, 1), 0,
+                                    self._cfg.vocab_size)
+        ep = gen_lib.generate(params, prompt, k_gen, cfg=self._cfg,
+                              num_steps=t, temperature=self._temperature)
+        tokens = ep["tokens"]                                  # (B, T+1)
+        reward = self._reward_fn(tokens)                       # (B, T)
+        done = jnp.zeros((b, t), bool).at[:, -1].set(True)
+        tm = lambda x: jnp.swapaxes(x, 0, 1)  # noqa: E731
+        return {
+            "obs": tm(tokens).astype(jnp.int32),               # (T+1, B)
+            "action": tm(tokens[:, 1:]).astype(jnp.int32),
+            "behavior_logprob": tm(ep["logprob"]).astype(jnp.float32),
+            "reward": tm(reward),
+            "done": tm(done),
+        }
+
+    def stop(self) -> None:
+        pass
+
+
+def lm_rl_step_from_rollout(lm_train_step: Callable) -> Callable:
+    """Adapt ``learner.make_lm_train_step`` (batch-major token dict) to the
+    canonical time-major rollout emitted by GeneratorSource."""
+
+    def step(params, opt_state, step_i, rollout):
+        bm = lambda x: jnp.swapaxes(x, 0, 1)  # noqa: E731
+        batch = {
+            "tokens": bm(rollout["obs"]),
+            "behavior_logprob": bm(rollout["behavior_logprob"]),
+            "reward": bm(rollout["reward"]),
+            "done": bm(rollout["done"]),
+        }
+        return lm_train_step(params, opt_state, step_i, batch)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Supervised data (LM pretraining)
+
+
+class DataSource:
+    """A RolloutSource over any iterator of ready batches — the non-RL
+    substrate (LM pretraining) runs through the same Runtime loop."""
+
+    def __init__(self, iterator: Iterator, *, frames_per_batch: int = 0,
+                 transform: Optional[Callable] = None,
+                 close: Optional[Callable] = None):
+        self._it = iterator
+        self.frames_per_batch = frames_per_batch
+        self._transform = transform
+        self._close = close
+
+    def start(self, params) -> None:
+        del params
+
+    def next_batch(self, params):
+        batch = next(self._it)
+        if self._transform is not None:
+            batch = self._transform(batch)
+        return batch
+
+    def stop(self) -> None:
+        if self._close is not None:
+            self._close()

@@ -1,0 +1,7 @@
+"""Pallas-TPU API compatibility across jax versions."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# Renamed TPUCompilerParams -> CompilerParams after jax 0.4.x.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

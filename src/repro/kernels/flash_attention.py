@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -2.0e38
 
 
@@ -133,7 +135,7 @@ def flash_attention(q, k, v, *, scale=None, causal=True, window=0,
             pltpu.VMEM((bq,), jnp.float32),       # l
             pltpu.VMEM((bq, hd), jnp.float32),    # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(c_ref, b_ref, x_ref, da_ref, h_ref, y_ref, hnew_ref, *, l, n, p):
     c = c_ref[0].astype(jnp.float32)          # (L, N)
@@ -89,7 +91,7 @@ def ssd_chunk(c, b, xdt, da, h_prev, *, interpret=False):
             jax.ShapeDtypeStruct((bh, l, p), xdt.dtype),
             jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(c, b, xdt, da, h_prev)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(deltas_ref, dcs_ref, acc_ref, *, t_len):
     def body(i, carry):
@@ -50,7 +52,7 @@ def vtrace_scan(deltas, dcs, *, block_b=128, interpret=False):
         ],
         out_specs=pl.BlockSpec((t, bb), lambda bi: (0, bi)),
         out_shape=jax.ShapeDtypeStruct((t, b), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(deltas.astype(jnp.float32), dcs.astype(jnp.float32))

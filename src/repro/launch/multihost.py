@@ -65,8 +65,8 @@ def main(argv=None):
             if n % m == 0:
                 model = m
                 break
-        mesh = jax.make_mesh((n // model, model), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((n // model, model), ("data", "model"))
     print(f"[host {args.process_id}] mesh {dict(mesh.shape)}")
 
     rules_name = resolve_rules(args.rules, args.shape, args.arch)

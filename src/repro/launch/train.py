@@ -1,17 +1,23 @@
-"""End-to-end training driver.
+"""End-to-end training driver: thin config -> Runtime assembly.
+
+Every mode builds (RolloutSource, step_fn) and hands them to the unified
+``core.runtime.Runtime`` — there is no per-mode step loop here.
 
 Modes:
   rl-agent  — paper-faithful IMPALA: on-device rollouts (catch/gridworld
-              envs) + convnet agent + V-trace learner. The MonoBeast/
-              PolyBeast host-loop equivalent lives in examples/quickstart.py.
-  lm-rl     — IMPALA with an LLM policy on the token-MDP: actors generate
-              episodes with the decode path (behavior log-probs recorded),
-              learner applies V-trace (DESIGN.md §2).
+              envs) + convnet agent + V-trace learner, double-buffered by
+              default (``--sync`` to disable, ``--actors host`` for the
+              MonoBeast/PolyBeast host-loop actor architecture).
+  lm-rl     — IMPALA with an LLM policy on the token-MDP: the decode path
+              generates episodes (behavior log-probs recorded), the learner
+              applies V-trace (DESIGN.md §2).
   lm        — plain next-token pretraining on the synthetic corpus.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --mode rl-agent --env catch \
       --steps 500
+  PYTHONPATH=src python -m repro.launch.train --mode rl-agent --actors host \
+      --steps 50
   PYTHONPATH=src python -m repro.launch.train --mode lm-rl \
       --arch granite-moe-1b-a400m --reduced --steps 50
   PYTHONPATH=src python -m repro.launch.train --mode lm --arch qwen3-4b \
@@ -21,28 +27,23 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import checkpoint as ckpt_lib
 from repro.configs import get_config, get_reduced_config
 from repro.configs.atari_impala import small_train
 from repro.configs.base import TrainConfig
-from repro.core import generate as gen_lib
 from repro.core import learner as learner_lib
-from repro.core import rollout as rollout_lib
-from repro.data import PackedBatchIterator, markov_corpus
-from repro.envs import catch, gridworld
+from repro.core import sources as sources_lib
+from repro.core.runtime import Runtime
 from repro.models import model as model_lib
 from repro.models.convnet import impala_deep, init_agent, minatar_net
 from repro.optim import make_optimizer
 
 
-def train_rl_agent(args):
+def build_rl_agent(args):
+    from repro.envs import catch, gridworld
     env = {"catch": catch, "gridworld": gridworld}[args.env].make()
     train_cfg = small_train(total_steps=args.steps,
                             learning_rate=args.lr or 2e-3,
@@ -51,119 +52,85 @@ def train_rl_agent(args):
     init_fn, apply_fn = net(env.obs_shape, env.num_actions)
     params, _ = init_agent(init_fn, jax.random.PRNGKey(train_cfg.seed))
     opt = make_optimizer(train_cfg)
-    opt_state = opt.init(params)
 
-    b = train_cfg.batch_size
-    key = jax.random.PRNGKey(train_cfg.seed + 1)
-    carry = rollout_lib.env_reset_batch(env, key, b)
-    unroll = rollout_lib.make_unroll(env, apply_fn, train_cfg.unroll_length)
-    train_step = learner_lib.make_train_step(apply_fn, opt, train_cfg)
-
-    @jax.jit
-    def combined(params, opt_state, step, carry, key):
-        carry, ro = unroll(params, carry, key)
-        params, opt_state, metrics = train_step(params, opt_state, step, ro)
-        return params, opt_state, carry, metrics
-
-    frames = 0
-    t0 = time.time()
-    for step in range(args.steps):
-        key, k = jax.random.split(key)
-        params, opt_state, carry, m = combined(
-            params, opt_state, jnp.int32(step), carry, k)
-        frames += b * train_cfg.unroll_length
-        if step % max(1, args.steps // 20) == 0 or step == args.steps - 1:
-            print(f"step {step:5d} frames {frames:9d} "
-                  f"reward/step={float(m['reward_per_step']):+.3f} "
-                  f"loss={float(m['loss']):+.3f} "
-                  f"fps={frames/(time.time()-t0):.0f}")
-    _maybe_save(args, {"params": params, "opt_state": opt_state}, args.steps)
-    return params
+    if args.actors == "host":
+        source = sources_lib.HostLoopSource(
+            env, apply_fn, num_actors=train_cfg.num_actors,
+            unroll_length=train_cfg.unroll_length,
+            batch_size=train_cfg.batch_size, seed=train_cfg.seed)
+    else:
+        source = sources_lib.DeviceSource.for_env(
+            env, apply_fn, unroll_length=train_cfg.unroll_length,
+            batch_size=train_cfg.batch_size,
+            key=jax.random.PRNGKey(train_cfg.seed + 1),
+            pipelined=not args.sync)
+    step_fn = jax.jit(learner_lib.make_train_step(apply_fn, opt, train_cfg))
+    return source, step_fn, params, opt.init(params), {
+        "log_keys": ("reward_per_step", "loss")}
 
 
-def train_lm_rl(args):
+def build_lm_rl(args):
     cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
     train_cfg = TrainConfig(optimizer="adamw", learning_rate=args.lr or 3e-4,
                             grad_clip=1.0, total_steps=args.steps,
                             lr_schedule="constant", entropy_cost=0.003)
     params, _ = model_lib.init(jax.random.PRNGKey(train_cfg.seed), cfg)
     opt = make_optimizer(train_cfg)
-    opt_state = opt.init(params)
-    train_step = jax.jit(learner_lib.make_lm_train_step(
-        cfg, opt, train_cfg, loss_chunk=args.seq))
-
-    b, t = args.batch or 16, args.seq
-    a_mod, b_mod = 5, 3
-    key = jax.random.PRNGKey(7)
-    for step in range(args.steps):
-        key, kgen, kprompt = jax.random.split(key, 3)
-        prompt = jax.random.randint(kprompt, (b, 1), 0, cfg.vocab_size)
-        ep = gen_lib.generate(params, prompt, kgen, cfg=cfg, num_steps=t)
-        tokens = ep["tokens"]
-        target = (a_mod * tokens[:, :-1] + b_mod) % cfg.vocab_size
-        reward = (tokens[:, 1:] == target).astype(jnp.float32)
-        done = jnp.zeros((b, t), bool).at[:, -1].set(True)
-        batch = {"tokens": tokens, "behavior_logprob": ep["logprob"],
-                 "reward": reward, "done": done}
-        params, opt_state, m = train_step(params, opt_state,
-                                          jnp.int32(step), batch)
-        if step % max(1, args.steps // 20) == 0 or step == args.steps - 1:
-            print(f"step {step:4d} reward/step="
-                  f"{float(m['reward_per_step']):.3f} "
-                  f"pg={float(m['pg_loss']):+.2f} "
-                  f"H={float(m['entropy_loss']):+.2f}")
-    _maybe_save(args, {"params": params, "opt_state": opt_state}, args.steps)
-    return params
+    source = sources_lib.GeneratorSource(
+        cfg, batch_size=args.batch or 16, episode_length=args.seq,
+        key=jax.random.PRNGKey(7))
+    step_fn = jax.jit(sources_lib.lm_rl_step_from_rollout(
+        learner_lib.make_lm_train_step(cfg, opt, train_cfg,
+                                       loss_chunk=args.seq)))
+    return source, step_fn, params, opt.init(params), {
+        "log_keys": ("reward_per_step", "pg_loss", "entropy_loss")}
 
 
-def train_lm(args):
+def build_lm(args):
+    from repro.data import PackedBatchIterator, markov_corpus
     cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
     train_cfg = TrainConfig(optimizer="adamw", learning_rate=args.lr or 3e-4,
                             grad_clip=1.0, total_steps=args.steps,
                             lr_schedule="cosine", warmup_steps=10)
     params, _ = model_lib.init(jax.random.PRNGKey(0), cfg)
     opt = make_optimizer(train_cfg)
-    opt_state = opt.init(params)
-    train_step = jax.jit(learner_lib.make_lm_pretrain_step(
+    step_fn = jax.jit(learner_lib.make_lm_pretrain_step(
         cfg, opt, loss_chunk=min(512, args.seq)))
 
+    b = args.batch or 16
     corpus = markov_corpus(cfg.vocab_size, 200_000, seed=1)
-    it = PackedBatchIterator(corpus, args.batch or 16, args.seq)
+    it = PackedBatchIterator(corpus, b, args.seq)
     vision = None
     if cfg.vision_seq:
-        vision = jnp.zeros((args.batch or 16, cfg.vision_seq, cfg.d_model),
+        vision = jnp.zeros((b, cfg.vision_seq, cfg.d_model),
                            jnp.dtype(cfg.dtype))
-    t0 = time.time()
-    try:
-        for step in range(args.steps):
-            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-            if vision is not None:
-                batch["vision"] = vision
-            params, opt_state, m = train_step(params, opt_state,
-                                              jnp.int32(step), batch)
-            if step % max(1, args.steps // 20) == 0 or step == args.steps - 1:
-                toks = (step + 1) * (args.batch or 16) * args.seq
-                print(f"step {step:4d} loss={float(m['loss']):.4f} "
-                      f"tok/s={toks/(time.time()-t0):.0f}")
-    finally:
-        it.close()
-    _maybe_save(args, {"params": params, "opt_state": opt_state}, args.steps)
-    return params
+
+    def transform(batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if vision is not None:
+            batch["vision"] = vision
+        return batch
+
+    source = sources_lib.DataSource(it, frames_per_batch=b * args.seq,
+                                    transform=transform, close=it.close)
+    return source, step_fn, params, opt.init(params), {
+        "log_keys": ("loss",), "fps_label": "tok/s"}
 
 
-def _maybe_save(args, tree, step):
-    if args.checkpoint_dir:
-        path = f"{args.checkpoint_dir}/step_{step}.npz"
-        ckpt_lib.save(path, tree, {"step": step})
-        print("saved", path)
+_BUILDERS = {"rl-agent": build_rl_agent, "lm-rl": build_lm_rl,
+             "lm": build_lm}
 
 
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--mode", choices=["rl-agent", "lm-rl", "lm"],
-                   default="rl-agent")
+    p.add_argument("--mode", choices=sorted(_BUILDERS), default="rl-agent")
     p.add_argument("--env", choices=["catch", "gridworld"], default="catch")
     p.add_argument("--agent", choices=["minatar", "deep"], default="minatar")
+    p.add_argument("--actors", choices=["device", "host"], default="device",
+                   help="rl-agent only: compiled on-device rollouts or the "
+                        "MonoBeast host actor loop")
+    p.add_argument("--sync", action="store_true",
+                   help="disable double-buffered rollout dispatch")
     p.add_argument("--arch", default="qwen3-4b")
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--steps", type=int, default=200)
@@ -172,8 +139,13 @@ def main(argv=None):
     p.add_argument("--lr", type=float, default=None)
     p.add_argument("--checkpoint-dir", default=None)
     args = p.parse_args(argv)
-    {"rl-agent": train_rl_agent, "lm-rl": train_lm_rl,
-     "lm": train_lm}[args.mode](args)
+
+    source, step_fn, params, opt_state, extras = _BUILDERS[args.mode](args)
+    runtime = Runtime(source, step_fn, params, opt_state,
+                      total_steps=args.steps,
+                      checkpoint_dir=args.checkpoint_dir, **extras)
+    runtime.run()
+    return runtime.params
 
 
 if __name__ == "__main__":

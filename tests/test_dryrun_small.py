@@ -18,8 +18,8 @@ from repro.launch.specs import build_program
 
 def _mesh():
     # single-device mesh with both axis names: exercises the full path
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 SMALL_SHAPES = {

@@ -6,8 +6,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
 
 from repro.configs import get_reduced_config
 from repro.models import moe
@@ -69,8 +67,10 @@ def test_load_balance_loss_uniform_is_one():
     assert float(aux.load_balance) >= 1.0 - 1e-5
 
 
-@settings(deadline=None, max_examples=10)
-@given(seed=st.integers(0, 1000), b=st.sampled_from([1, 2, 4]))
+# Seeded sweep standing in for the former hypothesis property test, so the
+# suite runs on a bare install (hypothesis is an optional extra).
+@pytest.mark.parametrize("seed,b", [(0, 1), (7, 2), (101, 4), (577, 2),
+                                    (1000, 1)])
 def test_router_gradients_finite(seed, b):
     cfg = _cfg()
     params = _params(cfg, key=seed % 7)
