@@ -1,5 +1,7 @@
 """Benchmark harness — one function per paper table/claim plus the
-roofline-table generator. Prints ``name,us_per_call,derived`` CSV rows.
+roofline-table generator. Prints ``name,us_per_call,derived`` CSV rows and
+writes each suite's rows to ``BENCH_<suite>.json`` (the CI bench-smoke
+artifact, so the perf trajectory is captured per-PR).
 
 Paper analogues:
   fps_host_loop     — PolyBeast throughput (frames/s): DynamicBatcher +
@@ -7,11 +9,19 @@ Paper analogues:
   fps_on_device     — the TPU-native (Anakin) rollout+learn step FPS.
   learner_step      — batched IMPALA learner step latency.
   vtrace            — V-trace computation (scan and Pallas-interpret paths).
+  pipeline          — sync vs double-buffered rollout-learn overlap FPS.
+  replay            — off-policy replay (core/replay.py): FPS + frames to
+                      the catch solve threshold for replay off/uniform/
+                      elite at a 1:1 replay ratio, and gridworld return at
+                      a fixed frame budget.
   attention         — chunked-vs-dense attention latency (model path).
   dynamic_batcher   — batching overhead per request.
   generate          — serving decode throughput (tokens/s).
   roofline_table    — re-prints the dry-run roofline terms per (arch, shape)
                       from experiments/dryrun (run launch.dryrun first).
+
+``--suite`` may be given multiple times (``--suite pipeline --suite
+replay``); ``--small`` shrinks every suite to CI-smoke scale.
 """
 
 from __future__ import annotations
@@ -25,9 +35,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+SMALL = False        # set by --small: CI-smoke scale
+_RESULTS = []        # rows of the suite currently running (JSON artifact)
+
 
 def row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    _RESULTS.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
 
 
 def timeit(fn, n=20, warmup=3):
@@ -130,6 +145,8 @@ def bench_pipeline(steps=60, repeats=3):
     """Synchronous vs double-buffered rollout-learn overlap (the Runtime's
     pipelined DeviceSource): same unroll + learner step, with and without
     one-step-lag double buffering."""
+    if SMALL:
+        steps, repeats = 20, 1
     from repro.configs.atari_impala import small_train
     from repro.core import learner as L
     from repro.core.sources import DeviceSource
@@ -174,6 +191,100 @@ def bench_pipeline(steps=60, repeats=3):
                 f"{best:.0f}fps")
         row(f"pipeline_speedup_{env_name}", 0.0,
             f"{fps['pipelined'] / fps['sync']:.3f}x")
+
+
+def _train_catch(mode, *, steps, threshold=0.05, window=50, seed=0,
+                 replay_ratio=1.0, capacity=256, env_name="catch"):
+    """One replay arm: train on catch (or gridworld), tracking the running
+    mean of reward_per_step. Returns (fps over fresh env frames,
+    frames at which the threshold was first sustained or None,
+    final running-mean reward, fresh frames per batch)."""
+    import collections
+    import dataclasses
+
+    from repro.configs.atari_impala import small_train
+    from repro.core import learner as L
+    from repro.core import replay as replay_lib
+    from repro.core.sources import DeviceSource, ReplaySource
+    from repro.envs import catch, gridworld
+
+    env = {"catch": catch, "gridworld": gridworld}[env_name].make()
+    tc = small_train(unroll_length=20, batch_size=32, learning_rate=2e-3,
+                     total_steps=steps)
+    if mode != "off":
+        tc = dataclasses.replace(tc, clear_policy_cost=0.01,
+                                 clear_value_cost=0.005)
+    from repro.models.convnet import init_agent, minatar_net
+    init_fn, apply_fn = minatar_net(env.obs_shape, env.num_actions)
+    params, _ = init_agent(init_fn, jax.random.PRNGKey(seed))
+    from repro.optim import make_optimizer
+    opt = make_optimizer(tc)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(L.make_train_step(apply_fn, opt, tc))
+
+    source = DeviceSource.for_env(
+        env, apply_fn, unroll_length=tc.unroll_length,
+        batch_size=tc.batch_size, key=jax.random.PRNGKey(seed + 1),
+        pipelined=True)
+    if mode != "off":
+        source = ReplaySource(source, replay_lib.make_buffer(mode, capacity),
+                              replay_ratio=replay_ratio, seed=seed,
+                              value_fn=jax.jit(
+                                  lambda p, obs: apply_fn(p, obs).baseline))
+    feedback = getattr(source, "on_learner_metrics", None)
+
+    rewards = collections.deque(maxlen=window)
+    solved_frames = None
+    source.start(params)
+    try:
+        # one step outside the clock to absorb compilation
+        batch = source.next_batch(params)
+        params, opt_state, m = step_fn(params, opt_state, jnp.int32(0),
+                                       batch)
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for s in range(1, steps):
+            batch = source.next_batch(params)
+            params, opt_state, m = step_fn(params, opt_state, jnp.int32(s),
+                                           batch)
+            if feedback is not None:
+                feedback(s, m)
+            rewards.append(float(m["reward_per_step"]))
+            if (solved_frames is None and len(rewards) == window
+                    and np.mean(rewards) >= threshold):
+                solved_frames = (s + 1) * source.frames_per_batch
+        jax.block_until_ready(m["loss"])
+        dt = time.perf_counter() - t0
+    finally:
+        source.stop()
+    fps = (steps - 1) * source.frames_per_batch / dt
+    return (fps, solved_frames,
+            float(np.mean(rewards)) if rewards else 0.0,
+            source.frames_per_batch)
+
+
+def bench_replay():
+    """Off-policy replay on vs off: fresh-frame FPS and frames to the catch
+    solve threshold (running-mean reward/step >= 0.05 over 50 steps;
+    optimum is +0.1) for replay off / uniform / elite at replay_ratio 1:1,
+    plus gridworld return at a fixed fresh-frame budget."""
+    steps = 60 if SMALL else 1000
+    window = 10 if SMALL else 50
+    for mode in ("off", "uniform", "elite"):
+        fps, solved, final, fpb = _train_catch(mode, steps=steps,
+                                               window=window)
+        solved_s = str(solved) if solved is not None else "never"
+        row(f"replay_{mode}_catch", 1e6 / fps * fpb,
+            f"{fps:.0f}fps solve_frames={solved_s} "
+            f"final_reward={final:+.3f}")
+    grid_steps = 30 if SMALL else 300
+    for mode in ("off", "elite"):
+        fps, _, final, fpb = _train_catch(mode, steps=grid_steps,
+                                          window=window,
+                                          threshold=float("inf"),
+                                          env_name="gridworld")
+        row(f"replay_{mode}_gridworld", 1e6 / fps * fpb,
+            f"{fps:.0f}fps return_at_budget={final:+.3f}")
 
 
 def bench_fps_host_loop(duration=6.0):
@@ -321,6 +432,7 @@ _SUITES = {
     "learner": bench_learner_step,
     "fps": bench_fps_on_device,
     "pipeline": bench_pipeline,
+    "replay": bench_replay,
     "host_loop": bench_fps_host_loop,
     "batcher": bench_dynamic_batcher,
     "attention": bench_attention,
@@ -332,17 +444,32 @@ _SUITES = {
 
 def main(argv=None) -> None:
     import argparse
+    import os
     p = argparse.ArgumentParser()
     p.add_argument("--suite", choices=["all"] + sorted(_SUITES),
-                   default="all", help="run one benchmark suite (default: "
-                                       "everything)")
+                   action="append", default=None,
+                   help="suite to run; repeatable (default: everything)")
+    p.add_argument("--small", action="store_true",
+                   help="CI-smoke scale (short training arms)")
+    p.add_argument("--out-dir", default=".",
+                   help="where BENCH_<suite>.json artifacts are written")
     args = p.parse_args(argv)
+    global SMALL
+    SMALL = args.small
+    os.makedirs(args.out_dir, exist_ok=True)
+    suites = args.suite or ["all"]
+    if "all" in suites:
+        suites = list(_SUITES)
     print("name,us_per_call,derived")
-    if args.suite == "all":
-        for fn in _SUITES.values():
-            fn()
-    else:
-        _SUITES[args.suite]()
+    for name in suites:
+        _RESULTS.clear()
+        _SUITES[name]()
+        path = os.path.join(args.out_dir, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump({"suite": name, "small": SMALL,
+                       "backend": jax.default_backend(),
+                       "rows": list(_RESULTS)}, f, indent=1)
+        print(f"# wrote {path}", flush=True)
 
 
 if __name__ == "__main__":

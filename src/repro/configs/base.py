@@ -183,6 +183,11 @@ class TrainConfig:
     vtrace_rho_clip: float = 1.0
     vtrace_c_clip: float = 1.0
 
+    # CLEAR cloning costs on replayed rows (active only when the batch
+    # carries an is_replay mask — i.e. behind a ReplaySource)
+    clear_policy_cost: float = 0.0
+    clear_value_cost: float = 0.0
+
     unroll_length: int = 80
     batch_size: int = 32
     num_actors: int = 48

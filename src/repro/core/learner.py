@@ -31,7 +31,13 @@ def make_train_step(agent_apply: Callable, opt, train_cfg):
 
     batch: time-major dict (see core/rollout.py):
       obs (T+1,B,...), action (T,B), behavior_logits (T,B,A),
-      reward (T,B), done (T,B)
+      reward (T,B), done (T,B) [, is_replay (B,) — ReplaySource batches]
+
+    With an ``is_replay`` mask present, the CLEAR cloning terms
+    (losses.clear_auxiliary_loss) are applied to the replayed columns at
+    ``train_cfg.clear_policy_cost`` / ``clear_value_cost``, and the
+    reported ``reward_per_step`` covers the fresh columns only (replayed
+    rewards are not new environment signal).
     """
 
     def loss_fn(params, batch):
@@ -46,13 +52,23 @@ def make_train_step(agent_apply: Callable, opt, train_cfg):
             baseline_cost=train_cfg.baseline_cost,
             entropy_cost=train_cfg.entropy_cost,
             clip_rho=train_cfg.vtrace_rho_clip,
-            clip_c=train_cfg.vtrace_c_clip)
+            clip_c=train_cfg.vtrace_c_clip,
+            is_replay=batch.get("is_replay"),
+            behavior_values=batch.get("behavior_value"),
+            clear_policy_cost=train_cfg.clear_policy_cost,
+            clear_value_cost=train_cfg.clear_value_cost)
         return loss_out.total, loss_out
 
     def train_step(params, opt_state, step, batch):
         grads, loss_out = jax.grad(loss_fn, has_aux=True)(params, batch)
         updates, opt_state = opt.update(grads, opt_state, params, step)
         params = apply_updates(params, updates)
+        if "is_replay" in batch:
+            fresh = (~batch["is_replay"]).astype(jnp.float32)[None, :]
+            reward_per_step = (batch["reward"] * fresh).sum() \
+                / jnp.maximum(fresh.sum() * batch["reward"].shape[0], 1.0)
+        else:
+            reward_per_step = batch["reward"].mean()
         metrics = {
             "loss": loss_out.total,
             "pg_loss": loss_out.pg_loss,
@@ -60,8 +76,12 @@ def make_train_step(agent_apply: Callable, opt, train_cfg):
             "entropy_loss": loss_out.entropy_loss,
             "vs_mean": loss_out.vs_mean,
             "rho_mean": loss_out.rho_mean,
-            "reward_per_step": batch["reward"].mean(),
+            "reward_per_step": reward_per_step,
+            "priority": loss_out.priority,
         }
+        if "is_replay" in batch:
+            metrics["clear_policy_loss"] = loss_out.clear_policy_loss
+            metrics["clear_value_loss"] = loss_out.clear_value_loss
         return params, opt_state, metrics
 
     return train_step

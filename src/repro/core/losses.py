@@ -29,19 +29,62 @@ class ImpalaLossOutput(NamedTuple):
     entropy_loss: jnp.ndarray
     vs_mean: jnp.ndarray
     rho_mean: jnp.ndarray
+    # per-column mean |pg_advantage| — the elite-replay priority signal
+    priority: jnp.ndarray = 0.0
+    clear_policy_loss: jnp.ndarray = 0.0
+    clear_value_loss: jnp.ndarray = 0.0
 
 
 def _reduce(x, reduce):
     return jnp.sum(x) if reduce == "sum" else jnp.sum(jnp.mean(x, axis=1))
 
 
+def clear_auxiliary_loss(target_lp_all, behavior_logits, values,
+                         behavior_values, is_replay, *, reduce="mean"):
+    """CLEAR-style behavioral + value cloning on replayed rows only
+    (Rolnick et al. 2019, "Experience Replay for Continual Learning"):
+
+      policy cloning  sum_t KL(mu || pi)         — keep pi close to the
+                                                   behavior policy that
+                                                   generated the replayed
+                                                   data
+      value cloning   0.5 * sum_t (V_mu - V)^2   — anchor V on the value
+                                                   estimates RECORDED when
+                                                   the data was generated
+                                                   (behavior_values; None
+                                                   disables the term)
+
+    is_replay: (B,) bool column mask; fresh rows contribute nothing.
+    target_lp_all/values carry gradients; behavior_logits/behavior_values
+    are data.
+    """
+    behavior_lp = jax.nn.log_softmax(
+        behavior_logits.astype(jnp.float32), -1)
+    kl = jnp.sum(jnp.exp(behavior_lp) * (behavior_lp - target_lp_all),
+                 axis=-1)                                   # (T, B)
+    mask = is_replay.astype(jnp.float32)[None, :]           # (1, B)
+    policy_cloning = _reduce(kl * mask, reduce)
+    value_cloning = jnp.zeros(())
+    if behavior_values is not None:
+        value_cloning = 0.5 * _reduce(
+            jnp.square(behavior_values - values) * mask, reduce)
+    return policy_cloning, value_cloning
+
+
 def impala_loss_from_logits(target_logits, behavior_logits, actions,
                             rewards, discounts, values, bootstrap_value,
                             *, baseline_cost=0.5, entropy_cost=0.01,
-                            clip_rho=1.0, clip_c=1.0, reduce="mean"):
+                            clip_rho=1.0, clip_c=1.0, reduce="mean",
+                            is_replay=None, behavior_values=None,
+                            clear_policy_cost=0.0, clear_value_cost=0.0):
     """Paper-faithful path (full logits, small action spaces). All (T,B,...).
 
     target_logits/values carry gradients; behavior_* are data.
+    is_replay: optional (B,) bool mask of replayed columns; when given
+    together with nonzero clear_*_cost, the CLEAR cloning terms are added
+    for those columns (core/replay.py). behavior_values (T,B): the acting
+    network's value estimates recorded at generation time — the
+    value-cloning anchor (without it only policy cloning is applied).
     """
     target_lp_all = jax.nn.log_softmax(target_logits.astype(jnp.float32), -1)
     target_lp = jnp.take_along_axis(target_lp_all, actions[..., None],
@@ -60,9 +103,20 @@ def impala_loss_from_logits(target_logits, behavior_logits, actions,
 
     total = pg_loss + baseline_cost * baseline_loss \
         + entropy_cost * entropy_loss
+
+    clear_pc = clear_vc = jnp.zeros(())
+    if is_replay is not None and (clear_policy_cost or clear_value_cost):
+        clear_pc, clear_vc = clear_auxiliary_loss(
+            target_lp_all, behavior_logits, values, behavior_values,
+            is_replay, reduce=reduce)
+        total = total + clear_policy_cost * clear_pc \
+            + clear_value_cost * clear_vc
+
     rho = jnp.exp(jax.lax.stop_gradient(target_lp) - behavior_lp)
+    priority = jnp.mean(jnp.abs(vt.pg_advantages), axis=0)     # (B,)
     return ImpalaLossOutput(total, pg_loss, baseline_loss, entropy_loss,
-                            vt.vs.mean(), rho.mean())
+                            vt.vs.mean(), rho.mean(), priority,
+                            clear_pc, clear_vc)
 
 
 def impala_loss_from_logprobs(target_logprobs, target_entropy,
@@ -83,8 +137,9 @@ def impala_loss_from_logprobs(target_logprobs, target_entropy,
     total = pg_loss + baseline_cost * baseline_loss \
         + entropy_cost * entropy_loss
     rho = jnp.exp(jax.lax.stop_gradient(target_logprobs) - behavior_logprobs)
+    priority = jnp.mean(jnp.abs(vt.pg_advantages), axis=0)     # (B,)
     return ImpalaLossOutput(total, pg_loss, baseline_loss, entropy_loss,
-                            vt.vs.mean(), rho.mean())
+                            vt.vs.mean(), rho.mean(), priority)
 
 
 # ---------------------------------------------------------------------------

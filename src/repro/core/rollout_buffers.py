@@ -61,14 +61,22 @@ class RolloutBuffers:
         The stack COPIES (as MonoBeast's torch.stack onto the GPU does), so
         recycling the indices immediately afterwards is safe — exactly the
         paper's ordering (stack, then put indices back, then learn).
+
+        If the learner dies mid-batch (timeout waiting for the remaining
+        indices, or an exception while stacking), every index already
+        dequeued is returned to the free list — slots must never leak, or
+        the bounded-buffer back-pressure eventually deadlocks the actors.
         """
-        idxs = [self.full_queue.get(timeout=timeout)
-                for _ in range(batch_size)]
-        batch = {k: np.stack([self.buffers[i][k] for i in idxs],
-                             axis=batch_dim)
-                 for k in self.specs}
-        for i in idxs:
-            self.free_queue.put(i)
+        idxs: List[int] = []
+        try:
+            for _ in range(batch_size):
+                idxs.append(self.full_queue.get(timeout=timeout))
+            batch = {k: np.stack([self.buffers[i][k] for i in idxs],
+                                 axis=batch_dim)
+                     for k in self.specs}
+        finally:
+            for i in idxs:
+                self.free_queue.put(i)
         return batch
 
     def qsizes(self):

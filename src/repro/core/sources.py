@@ -25,6 +25,10 @@ exactly the learner-input layout of the paper's §2, so the `Runtime`
   ``GeneratorSource`` — LLM-policy token-MDP episodes via the decode path
                         (core/generate.py), re-laid-out time-major.
   ``DataSource``      — any iterator of ready batches (LM pretraining).
+  ``ReplaySource``    — off-policy replay composition over any of the
+                        above: inserts fresh rollouts into a ReplayBuffer
+                        (core/replay.py) and emits mixed fresh+replayed
+                        batches tagged with an ``is_replay`` column mask.
 """
 
 from __future__ import annotations
@@ -153,6 +157,114 @@ class DeviceSource:
 
     def stop(self) -> None:
         self._pending = None
+
+
+# ---------------------------------------------------------------------------
+# Off-policy replay composition
+
+
+class ReplaySource:
+    """Compose a replay buffer over any ``RolloutSource``.
+
+    Every ``next_batch`` (1) pulls one fresh rollout batch from the inner
+    source, (2) inserts its B columns into the buffer, (3) samples
+    ``round(B * replay_ratio)`` stored rollouts and (4) emits the
+    concatenation along the batch axis, tagged with a per-column
+    ``is_replay`` mask. Replayed columns keep the ``behavior_logits`` /
+    ``behavior_logprob`` recorded when they were generated, so the V-trace
+    importance weights in the learner stay correct for stale data — no
+    special-casing in the loss beyond the optional CLEAR terms
+    (core/losses.py) gated on ``is_replay``.
+
+    ``replay_ratio`` is replayed:fresh — 1.0 means a 1:1 mixed batch of
+    2B columns. ``frames_per_batch`` counts only the B fresh columns
+    (replayed rows cost no new environment frames; that is the
+    sample-efficiency argument). Sampling happens BEFORE the fresh batch
+    is inserted, so replayed rows always predate the current step — except
+    the very first batch, which warm-starts from its own columns.
+
+    ``value_fn(params, obs) -> (T, B) values`` (optional) records the
+    acting network's value estimates on every fresh rollout at insert
+    time; replayed columns then carry them back as ``behavior_value``, the
+    cloning target of the CLEAR value-cloning term (core/losses.py).
+
+    The learner step feeds per-column priorities back through
+    ``on_learner_metrics`` (the Runtime calls it after every step when the
+    metrics dict carries a ``priority`` vector aligned with the emitted
+    columns: fresh first, then replayed).
+    """
+
+    def __init__(self, source, buffer, *, replay_ratio: float = 1.0,
+                 seed: int = 0, value_fn: Optional[Callable] = None):
+        self.inner = source
+        self.buffer = buffer
+        self.replay_ratio = float(replay_ratio)
+        self.frames_per_batch = source.frames_per_batch
+        self._value_fn = value_fn
+        self._rng = np.random.default_rng(seed)
+        self._last_ids: list = []
+        self._served = 0        # replayed columns emitted
+        self._hits = 0          # ... that were NOT inserted this very step
+
+    def start(self, params) -> None:
+        self.inner.start(params)
+
+    def next_batch(self, params):
+        fresh = self.inner.next_batch(params)
+        if self._value_fn is not None and "behavior_value" not in fresh:
+            # ≈ the behavior network's values (exact up to the source's
+            # parameter lag) — the CLEAR value-cloning anchor.
+            fresh = dict(fresh, behavior_value=jnp.asarray(
+                self._value_fn(params, fresh["obs"][:-1]), jnp.float32))
+        b = fresh["action"].shape[1]
+        k = int(round(b * self.replay_ratio))
+        query = np.asarray(fresh["obs"]) \
+            if k and getattr(self.buffer, "needs_query", False) else None
+        replayed = None
+        if k and len(self.buffer):   # sample strictly-older data first
+            replayed, replay_ids = self.buffer.sample(k, self._rng,
+                                                      query=query)
+        fresh_ids = self.buffer.insert(fresh)
+        if k == 0:
+            self._last_ids = list(fresh_ids)
+            return dict(fresh, is_replay=jnp.zeros((b,), bool))
+        if replayed is None:         # first batch: warm-start from itself
+            replayed, replay_ids = self.buffer.sample(k, self._rng,
+                                                      query=query)
+        batch = {key: jnp.concatenate(
+            [jnp.asarray(fresh[key]), jnp.asarray(replayed[key])], axis=1)
+            for key in replayed}
+        batch["is_replay"] = jnp.zeros((b + k,), bool).at[b:].set(True)
+        self._last_ids = list(fresh_ids) + list(replay_ids)
+        self._served += k
+        fresh_set = set(fresh_ids)
+        self._hits += sum(1 for i in replay_ids if i not in fresh_set)
+        return batch
+
+    def on_learner_metrics(self, step, metrics) -> None:
+        """Runtime feedback hook: route the learner's per-column priority
+        vector to the slots that produced the last batch."""
+        del step
+        prio = metrics.get("priority") if hasattr(metrics, "get") else None
+        if prio is None or not self._last_ids:
+            return
+        prio = np.asarray(prio, np.float64)
+        if prio.shape[0] == len(self._last_ids):
+            self.buffer.update_priorities(self._last_ids, prio)
+
+    def stats(self):
+        s = {f"replay_{k}": v for k, v in self.buffer.stats().items()}
+        s["replay_hit_rate"] = self._hits / max(self._served, 1)
+        return s
+
+    def stop(self) -> None:
+        """Stop the inner source and recycle every buffer slot back to the
+        free list — even when the learner died mid-batch."""
+        try:
+            self.inner.stop()
+        finally:
+            self._last_ids = []
+            self.buffer.clear()
 
 
 # ---------------------------------------------------------------------------

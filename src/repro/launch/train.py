@@ -18,6 +18,8 @@ Examples:
       --steps 500
   PYTHONPATH=src python -m repro.launch.train --mode rl-agent --actors host \
       --steps 50
+  PYTHONPATH=src python -m repro.launch.train --mode rl-agent --env catch \
+      --replay elite --replay-ratio 1.0 --steps 500
   PYTHONPATH=src python -m repro.launch.train --mode lm-rl \
       --arch granite-moe-1b-a400m --reduced --steps 50
   PYTHONPATH=src python -m repro.launch.train --mode lm --arch qwen3-4b \
@@ -43,11 +45,16 @@ from repro.optim import make_optimizer
 
 
 def build_rl_agent(args):
+    import dataclasses
+
     from repro.envs import catch, gridworld
     env = {"catch": catch, "gridworld": gridworld}[args.env].make()
     train_cfg = small_train(total_steps=args.steps,
                             learning_rate=args.lr or 2e-3,
                             batch_size=args.batch or 32)
+    if args.replay != "off":
+        train_cfg = dataclasses.replace(train_cfg, clear_policy_cost=0.01,
+                                        clear_value_cost=0.005)
     net = impala_deep if args.agent == "deep" else minatar_net
     init_fn, apply_fn = net(env.obs_shape, env.num_actions)
     params, _ = init_agent(init_fn, jax.random.PRNGKey(train_cfg.seed))
@@ -64,6 +71,12 @@ def build_rl_agent(args):
             batch_size=train_cfg.batch_size,
             key=jax.random.PRNGKey(train_cfg.seed + 1),
             pipelined=not args.sync)
+    if args.replay != "off":
+        from repro.core import replay as replay_lib
+        source = sources_lib.ReplaySource(
+            source, replay_lib.make_buffer(args.replay, args.replay_capacity),
+            replay_ratio=args.replay_ratio, seed=train_cfg.seed,
+            value_fn=jax.jit(lambda p, obs: apply_fn(p, obs).baseline))
     step_fn = jax.jit(learner_lib.make_train_step(apply_fn, opt, train_cfg))
     return source, step_fn, params, opt.init(params), {
         "log_keys": ("reward_per_step", "loss")}
@@ -131,6 +144,14 @@ def main(argv=None):
                         "MonoBeast host actor loop")
     p.add_argument("--sync", action="store_true",
                    help="disable double-buffered rollout dispatch")
+    p.add_argument("--replay", default="off",
+                   choices=["off", "uniform", "elite", "attentive"],
+                   help="rl-agent only: mix replayed rollouts into every "
+                        "learner batch (core/replay.py)")
+    p.add_argument("--replay-capacity", type=int, default=512,
+                   help="replay buffer size in rollouts")
+    p.add_argument("--replay-ratio", type=float, default=1.0,
+                   help="replayed:fresh columns per batch (1.0 = 1:1)")
     p.add_argument("--arch", default="qwen3-4b")
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--steps", type=int, default=200)

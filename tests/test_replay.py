@@ -1,0 +1,358 @@
+"""Replay subsystem contract tests (core/replay.py + ReplaySource):
+
+* capacity eviction order per strategy (FIFO vs lowest-priority-first),
+* priority update after a real learner step (elite feedback loop),
+* mixed fresh+replayed batches stay valid under ``check_rollout`` and
+  ``ReplaySource`` satisfies the ``RolloutSource`` protocol,
+* determinism under a fixed seed,
+* slot-index leak regressions: ``RolloutBuffers.get_batch`` dying
+  mid-batch, malformed inserts, and ``ReplaySource.stop()`` all return
+  slot indices to the free list.
+"""
+
+import queue
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.atari_impala import small_train
+from repro.core import learner as learner_lib
+from repro.core import losses
+from repro.core.replay import (AttentiveReplay, EliteReplay, ReplayBuffer,
+                               UniformReplay, make_buffer)
+from repro.core.rollout_buffers import RolloutBuffers
+from repro.core.runtime import Runtime
+from repro.core.sources import (DeviceSource, ReplaySource, RolloutSource,
+                                check_rollout)
+from repro.envs import catch
+from repro.models.convnet import init_agent, minatar_net
+from repro.optim import make_optimizer
+
+T, B, A = 4, 3, 3
+OBS = (2, 2, 1)
+
+
+def make_rollout(ids, t=T, num_actions=A, seed=0):
+    """A canonical time-major rollout batch whose column i is filled with
+    the identifying value ids[i] (recoverable from reward[0, i])."""
+    ids = np.asarray(ids, np.float32)
+    b = len(ids)
+    rng = np.random.default_rng(seed)
+    return {
+        "obs": np.broadcast_to(
+            ids[None, :, None, None, None], (t + 1, b) + OBS
+        ).astype(np.float32).copy(),
+        "action": rng.integers(0, num_actions, (t, b)).astype(np.int32),
+        "behavior_logits": rng.normal(0, 1, (t, b, num_actions)
+                                      ).astype(np.float32),
+        "reward": np.broadcast_to(ids[None, :], (t, b)).astype(
+            np.float32).copy(),
+        "done": np.zeros((t, b), bool),
+    }
+
+
+def contents(buf):
+    """The identifying values currently stored (via the reward channel)."""
+    live = np.flatnonzero(buf._live)
+    return sorted(buf._arrays["reward"][i][0] for i in live)
+
+
+def _agent():
+    env = catch.make()
+    init_fn, apply_fn = minatar_net(env.obs_shape, env.num_actions)
+    params, _ = init_agent(init_fn, jax.random.PRNGKey(0))
+    return env, apply_fn, params
+
+
+# -- eviction order ----------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["uniform", "attentive"])
+def test_fifo_eviction_evicts_oldest(kind):
+    buf = make_buffer(kind, 4)
+    buf.insert(make_rollout([0, 1, 2]))
+    buf.insert(make_rollout([3, 4, 5]))       # capacity 4: evicts 0 and 1
+    assert len(buf) == 4
+    assert contents(buf) == [2, 3, 4, 5]
+    assert buf.evicted == 2
+
+
+def test_elite_eviction_evicts_lowest_priority_first():
+    buf = EliteReplay(4)
+    buf.insert(make_rollout([0, 1, 2, 3]),
+               priorities=np.array([5.0, 1.0, 4.0, 3.0]))
+    buf.insert(make_rollout([9]), priorities=np.array([2.0]))
+    assert contents(buf) == [0, 2, 3, 9]      # prio-1.0 rollout (id 1) died
+    buf.insert(make_rollout([8]), priorities=np.array([6.0]))
+    assert contents(buf) == [0, 2, 3, 8]      # next lowest was id 9 (2.0)
+
+
+def test_optimistic_default_priority_for_unscored_inserts():
+    buf = EliteReplay(8)
+    buf.insert(make_rollout([0, 1]), priorities=np.array([7.0, 2.0]))
+    buf.insert(make_rollout([2]))             # unscored -> current max (7.0)
+    live = np.flatnonzero(buf._live)
+    assert buf._prio[live].max() == buf._prio[live[-1]] == 7.0
+
+
+# -- priority feedback --------------------------------------------------------
+
+def test_priority_update_ignores_evicted_slots():
+    buf = EliteReplay(2)
+    ids = buf.insert(make_rollout([0, 1]))
+    _, sampled = buf.sample(2, np.random.default_rng(0))
+    buf.insert(make_rollout([2, 3]), priorities=np.array([9.0, 9.0]))
+    # ids were fully evicted; stale update must not resurrect them
+    buf.update_priorities(ids, np.array([100.0, 100.0]))
+    live = np.flatnonzero(buf._live)
+    assert (buf._prio[live] == 9.0).all()
+    del sampled
+
+
+def test_elite_priority_updates_after_learner_step():
+    """The full feedback loop: Runtime -> train-step 'priority' metric ->
+    ReplaySource.on_learner_metrics -> buffer priorities move off the
+    optimistic default."""
+    env, apply_fn, params = _agent()
+    tc = small_train(unroll_length=T, batch_size=B, total_steps=10,
+                     clear_policy_cost=0.01, clear_value_cost=0.005)
+    opt = make_optimizer(tc)
+    src = DeviceSource.for_env(env, apply_fn, unroll_length=T, batch_size=B,
+                               key=jax.random.PRNGKey(1), pipelined=False)
+    buf = EliteReplay(16)
+    rs = ReplaySource(src, buf, replay_ratio=1.0, seed=0)
+    step = jax.jit(learner_lib.make_train_step(apply_fn, opt, tc))
+    Runtime(rs, step, params, opt.init(params), total_steps=3,
+            log_every=0).run()
+    # all slots were recycled by stop(); re-run without stop to inspect
+    rs.start(params)
+    batch = rs.next_batch(params)
+    _, _, metrics = step(params, opt.init(params), jnp.int32(0), batch)
+    assert metrics["priority"].shape == (2 * B,)
+    before = buf._prio[np.flatnonzero(buf._live)].copy()
+    rs.on_learner_metrics(0, metrics)
+    after = buf._prio[np.flatnonzero(buf._live)]
+    assert not np.array_equal(before, after)
+    assert (after[np.isfinite(after)] >= 0).all()
+
+
+# -- attentive similarity -----------------------------------------------------
+
+def test_attentive_samples_nearest_observations():
+    buf = AttentiveReplay(8)
+    buf.insert(make_rollout([0.0, 0.0, 0.0]))       # obs ~ 0
+    buf.insert(make_rollout([10.0, 10.0, 10.0]))    # obs ~ 10
+    near_ten = make_rollout([9.0, 9.0, 9.0])
+    sampled, _ = buf.sample(3, np.random.default_rng(0),
+                            query=near_ten["obs"])
+    assert (sampled["reward"] == 10.0).all()
+    near_zero = make_rollout([1.0, 1.0, 1.0])
+    sampled, _ = buf.sample(3, np.random.default_rng(0),
+                            query=near_zero["obs"])
+    assert (sampled["reward"] == 0.0).all()
+
+
+# -- mixed-batch contract -----------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["uniform", "elite", "attentive"])
+def test_replay_source_satisfies_rollout_source_contract(kind):
+    env, apply_fn, params = _agent()
+    src = DeviceSource.for_env(env, apply_fn, unroll_length=T, batch_size=B,
+                               key=jax.random.PRNGKey(2), pipelined=False)
+    rs = ReplaySource(src, make_buffer(kind, 16), replay_ratio=1.0, seed=0)
+    assert isinstance(rs, RolloutSource)
+    assert rs.frames_per_batch == T * B       # fresh env frames only
+    try:
+        rs.start(params)
+        for _ in range(3):
+            batch = rs.next_batch(params)
+            check_rollout(batch, T, 2 * B)    # 1:1 mix -> 2B columns
+            assert batch["is_replay"].shape == (2 * B,)
+            assert int(batch["is_replay"].sum()) == B
+            assert not bool(batch["is_replay"][:B].any())
+    finally:
+        rs.stop()
+
+
+def test_replay_ratio_zero_passes_through_fresh_batches():
+    env, apply_fn, params = _agent()
+    src = DeviceSource.for_env(env, apply_fn, unroll_length=T, batch_size=B,
+                               key=jax.random.PRNGKey(3), pipelined=False)
+    rs = ReplaySource(src, make_buffer("uniform", 8), replay_ratio=0.0)
+    rs.start(params)
+    batch = rs.next_batch(params)
+    check_rollout(batch, T, B)
+    assert not bool(batch["is_replay"].any())
+    assert len(rs.buffer) == B                # still feeds the buffer
+    rs.stop()
+
+
+# -- determinism --------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["uniform", "elite", "attentive"])
+def test_sampling_deterministic_under_fixed_seed(kind):
+    def run():
+        buf = make_buffer(kind, 8)
+        rng = np.random.default_rng(42)
+        out = []
+        for i in range(4):
+            buf.insert(make_rollout([3 * i, 3 * i + 1, 3 * i + 2], seed=i))
+            sampled, ids = buf.sample(
+                4, rng, query=make_rollout([3 * i]).get("obs"))
+            out.append((tuple(ids), sampled["reward"].copy()))
+        return out
+
+    a, b = run(), run()
+    for (ids_a, r_a), (ids_b, r_b) in zip(a, b):
+        assert ids_a == ids_b
+        np.testing.assert_array_equal(r_a, r_b)
+
+
+# -- CLEAR auxiliary loss -----------------------------------------------------
+
+def test_clear_loss_zero_on_fresh_rows_positive_on_replayed():
+    rng = np.random.default_rng(0)
+    target = jnp.asarray(rng.normal(0, 1, (T, B, A)), jnp.float32)
+    behavior = jnp.asarray(rng.normal(0, 1, (T, B, A)), jnp.float32)
+    values = jnp.asarray(rng.normal(0, 1, (T, B)), jnp.float32)
+    behavior_values = jnp.asarray(rng.normal(0, 1, (T, B)), jnp.float32)
+    lp = jax.nn.log_softmax(target, -1)
+    pc0, vc0 = losses.clear_auxiliary_loss(
+        lp, behavior, values, behavior_values, jnp.zeros((B,), bool))
+    assert float(pc0) == float(vc0) == 0.0
+    pc, vc = losses.clear_auxiliary_loss(
+        lp, behavior, values, behavior_values, jnp.ones((B,), bool))
+    assert float(pc) > 0 and float(vc) > 0
+    # mu == pi -> policy cloning vanishes even on replayed rows
+    pc_same, _ = losses.clear_auxiliary_loss(
+        lp, target, values, behavior_values, jnp.ones((B,), bool))
+    assert float(pc_same) == pytest.approx(0.0, abs=1e-5)
+    # no recorded behavior values -> value cloning disabled
+    _, vc_none = losses.clear_auxiliary_loss(
+        lp, behavior, values, None, jnp.ones((B,), bool))
+    assert float(vc_none) == 0.0
+    # value cloning is anchored on the RECORDED values, not V-trace targets
+    _, vc_same = losses.clear_auxiliary_loss(
+        lp, behavior, values, values, jnp.ones((B,), bool))
+    assert float(vc_same) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_value_fn_records_behavior_values_through_replay_source():
+    env, apply_fn, params = _agent()
+    tc = small_train(unroll_length=T, batch_size=B, total_steps=10,
+                     clear_policy_cost=0.01, clear_value_cost=0.005)
+    opt = make_optimizer(tc)
+    src = DeviceSource.for_env(env, apply_fn, unroll_length=T, batch_size=B,
+                               key=jax.random.PRNGKey(6), pipelined=False)
+    rs = ReplaySource(src, make_buffer("uniform", 16), replay_ratio=1.0,
+                      value_fn=jax.jit(
+                          lambda p, obs: apply_fn(p, obs).baseline))
+    step = jax.jit(learner_lib.make_train_step(apply_fn, opt, tc))
+    rs.start(params)
+    try:
+        batch = rs.next_batch(params)
+        assert batch["behavior_value"].shape == (T, 2 * B)
+        check_rollout(batch, T, 2 * B)
+        _, _, m = step(params, opt.init(params), jnp.int32(0), batch)
+        assert bool(jnp.isfinite(m["clear_value_loss"]))
+        assert bool(jnp.isfinite(m["clear_policy_loss"]))
+    finally:
+        rs.stop()
+
+
+def test_replayed_rows_predate_current_step():
+    """Sampling happens before insertion: after warmup, every replayed
+    column must come from an earlier step (no self-replay bias — the
+    attentive strategy would otherwise always pick the just-inserted
+    near-identical columns)."""
+    env, apply_fn, params = _agent()
+    src = DeviceSource.for_env(env, apply_fn, unroll_length=T, batch_size=B,
+                               key=jax.random.PRNGKey(7), pipelined=False)
+    rs = ReplaySource(src, make_buffer("attentive", 32), replay_ratio=1.0)
+    rs.start(params)
+    try:
+        rs.next_batch(params)              # warmup: samples itself
+        for _ in range(3):
+            rs.next_batch(params)
+            fresh_ids = set(rs._last_ids[:B])
+            replay_ids = set(rs._last_ids[B:])
+            assert not (fresh_ids & replay_ids)
+    finally:
+        rs.stop()
+    assert rs.stats()["replay_hit_rate"] == pytest.approx(3 * B / (4 * B))
+
+
+# -- slot-leak regressions ----------------------------------------------------
+
+def test_rollout_buffers_get_batch_returns_indices_on_timeout():
+    """Learner dies mid-batch: the already-dequeued indices must come back
+    to the free list, or back-pressure deadlocks the actors (regression)."""
+    specs = {"reward": ((T,), np.float32)}
+    rb = RolloutBuffers(specs, num_buffers=4)
+    i = rb.acquire()
+    rb.write(i, {"reward": np.ones(T, np.float32)})
+    rb.commit(i)                               # only 1 full, need 2
+    with pytest.raises(queue.Empty):
+        rb.get_batch(batch_size=2, timeout=0.05)
+    q = rb.qsizes()
+    assert q["free"] + q["full"] == 4          # nothing leaked
+    assert q["free"] == 4                      # and it is reusable
+
+
+def test_replay_insert_returns_slot_on_malformed_rollout():
+    buf = UniformReplay(4)
+    buf.insert(make_rollout([0, 1]))
+    bad = make_rollout([2])
+    bad["obs"] = bad["obs"][:, :, :1]          # wrong feature shape
+    with pytest.raises(Exception):
+        buf.insert(bad)
+    assert len(buf) == 2
+    assert len(buf._free) + len(buf) == buf.capacity
+    buf.insert(make_rollout([3, 4]))           # buffer still fully usable
+    assert len(buf) == 4
+
+
+def test_replay_source_stop_recycles_all_slots():
+    env, apply_fn, params = _agent()
+    src = DeviceSource.for_env(env, apply_fn, unroll_length=T, batch_size=B,
+                               key=jax.random.PRNGKey(4), pipelined=False)
+    buf = make_buffer("uniform", 16)
+    rs = ReplaySource(src, buf, replay_ratio=1.0)
+    rs.start(params)
+    rs.next_batch(params)
+    assert len(buf) == B
+    rs.stop()
+    assert len(buf) == 0
+    assert len(buf._free) == buf.capacity
+
+
+def test_replay_source_stop_recycles_even_if_inner_stop_dies():
+    class DyingSource:
+        frames_per_batch = T * B
+
+        def start(self, params):
+            pass
+
+        def next_batch(self, params):
+            return make_rollout([0, 1, 2])
+
+        def stop(self):
+            raise RuntimeError("learner died mid-batch")
+
+    buf = make_buffer("uniform", 8)
+    rs = ReplaySource(DyingSource(), buf, replay_ratio=1.0)
+    rs.start(None)
+    rs.next_batch(None)
+    assert len(buf) == 3
+    with pytest.raises(RuntimeError):
+        rs.stop()
+    assert len(buf) == 0                       # slots recycled regardless
+    assert len(buf._free) == buf.capacity
+
+
+def test_buffer_protocol():
+    for kind in ("uniform", "elite", "attentive"):
+        assert isinstance(make_buffer(kind, 4), ReplayBuffer)
+    with pytest.raises(ValueError):
+        make_buffer("nope", 4)
