@@ -10,6 +10,9 @@ Paper analogues:
   learner_step      — batched IMPALA learner step latency.
   vtrace            — V-trace computation (scan and Pallas-interpret paths).
   pipeline          — sync vs double-buffered rollout-learn overlap FPS.
+  scaling           — data-parallel sharded learner FPS vs mesh size
+                      (1/2/4/8 devices; forces 8 host CPU devices via
+                      XLA_FLAGS when requested).
   replay            — off-policy replay (core/replay.py): FPS + frames to
                       the catch solve threshold for replay off/uniform/
                       elite at a 1:1 replay ratio, and gridworld return at
@@ -287,6 +290,62 @@ def bench_replay():
             f"{fps:.0f}fps return_at_budget={final:+.3f}")
 
 
+def bench_scaling(steps=40):
+    """Data-parallel learner scaling: rollout+learn FPS vs mesh size for
+    1/2/4/8 devices (weak scaling: 32 batch columns per device). On CPU run
+    under XLA_FLAGS=--xla_force_host_platform_device_count=8 — ``main``
+    sets it automatically when scaling is the SOLE suite requested (mixing
+    it with other suites would skew their timings); otherwise the curve is
+    truncated to the visible device count."""
+    if SMALL:
+        steps = 12
+    from repro.configs.atari_impala import small_train
+    from repro.core import learner as L
+    from repro.core.sources import ShardedDeviceSource
+    from repro.distributed.sharding import RL_AGENT_RULES
+    from repro.envs import catch
+    from repro.launch.mesh import make_data_mesh
+    from repro.models.convnet import init_agent, minatar_net
+    from repro.optim import make_optimizer
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    env = catch.make()
+    n_dev = len(jax.devices())
+    counts = [n for n in (1, 2, 4, 8) if n <= n_dev]
+    per_device_batch = 32
+    for n in counts:
+        mesh = make_data_mesh(n)
+        tc = small_train(unroll_length=20, batch_size=per_device_batch * n)
+        init_fn, apply_fn = minatar_net(env.obs_shape, env.num_actions)
+        params, _ = init_agent(init_fn, jax.random.PRNGKey(0))
+        params = jax.device_put(params, NamedSharding(mesh, PartitionSpec()))
+        opt = make_optimizer(tc)
+        opt_state = opt.init(params)
+        step_fn = jax.jit(L.make_train_step(apply_fn, opt, tc, mesh=mesh,
+                                            rules=RL_AGENT_RULES))
+        source = ShardedDeviceSource.for_env(
+            env, apply_fn, unroll_length=tc.unroll_length,
+            batch_size=tc.batch_size, key=jax.random.PRNGKey(1), mesh=mesh,
+            pipelined=True)
+        m = None
+        for s in range(4):  # warmup: compile per-device unrolls + step
+            batch = source.next_batch(params)
+            params, opt_state, m = step_fn(params, opt_state, jnp.int32(s),
+                                           batch)
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for s in range(steps):
+            batch = source.next_batch(params)
+            params, opt_state, m = step_fn(params, opt_state,
+                                           jnp.int32(4 + s), batch)
+        jax.block_until_ready(m["loss"])
+        dt = time.perf_counter() - t0
+        source.stop()
+        fps = steps * source.frames_per_batch / dt
+        row(f"scaling_n{n}_catch", dt / steps * 1e6,
+            f"{fps:.0f}fps {fps / n:.0f}fps/dev B={tc.batch_size}")
+
+
 def bench_fps_host_loop(duration=6.0):
     """MonoBeast/PolyBeast host actor loop throughput (§4 FPS analogue)."""
     from repro.configs.atari_impala import small_train
@@ -433,6 +492,7 @@ _SUITES = {
     "fps": bench_fps_on_device,
     "pipeline": bench_pipeline,
     "replay": bench_replay,
+    "scaling": bench_scaling,
     "host_loop": bench_fps_host_loop,
     "batcher": bench_dynamic_batcher,
     "attention": bench_attention,
@@ -460,6 +520,16 @@ def main(argv=None) -> None:
     suites = args.suite or ["all"]
     if "all" in suites:
         suites = list(_SUITES)
+    if (suites == ["scaling"]
+            and "--xla_force_host_platform_device_count"
+            not in os.environ.get("XLA_FLAGS", "")):
+        # must land before jax initialises its backend (no device query has
+        # happened yet — suites run after this point). Only when scaling is
+        # the SOLE suite: forcing 8 CPU devices would skew every other
+        # suite's timings in the same process (run scaling standalone to
+        # get the full 1/2/4/8 curve).
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_count=8")
     print("name,us_per_call,derived")
     for name in suites:
         _RESULTS.clear()
@@ -468,6 +538,7 @@ def main(argv=None) -> None:
         with open(path, "w") as f:
             json.dump({"suite": name, "small": SMALL,
                        "backend": jax.default_backend(),
+                       "devices": jax.device_count(),
                        "rows": list(_RESULTS)}, f, indent=1)
         print(f"# wrote {path}", flush=True)
 

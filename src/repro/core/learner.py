@@ -26,7 +26,21 @@ from repro.models import model as model_lib
 from repro.optim.optimizers import apply_updates
 
 
-def make_train_step(agent_apply: Callable, opt, train_cfg):
+def _make_shard_fns(mesh, rules):
+    """(batch constrainer, grad constrainer) for a (mesh, rules) context;
+    both identity when no mesh is given (the single-device path compiles
+    to the exact same program as before)."""
+    if mesh is None:
+        return (lambda batch: batch), (lambda grads: grads)
+    from repro.distributed import sharding as sharding_lib
+    if rules is None:
+        rules = sharding_lib.RL_AGENT_RULES
+    return (lambda batch: sharding_lib.shard_rollout(batch, mesh, rules),
+            lambda grads: sharding_lib.replicate(grads, mesh))
+
+
+def make_train_step(agent_apply: Callable, opt, train_cfg, *,
+                    mesh=None, rules=None, vtrace_impl="scan"):
     """Paper-faithful IMPALA learner step over a rollout batch.
 
     batch: time-major dict (see core/rollout.py):
@@ -38,7 +52,14 @@ def make_train_step(agent_apply: Callable, opt, train_cfg):
     ``train_cfg.clear_policy_cost`` / ``clear_value_cost``, and the
     reported ``reward_per_step`` covers the fresh columns only (replayed
     rewards are not new environment signal).
+
+    mesh/rules: optional data-parallel context (distributed/sharding.py).
+    The batch is constrained to shard its B dimension over the mesh data
+    axes and the gradients to be replicated — the cross-device all-reduce
+    falls out of sharding propagation (module docstring).
+    vtrace_impl: 'scan' or 'kernel' (the Pallas V-trace recursion).
     """
+    shard_batch, shard_grads = _make_shard_fns(mesh, rules)
 
     def loss_fn(params, batch):
         out = agent_apply(params, batch["obs"])       # (T+1, B, ...)
@@ -56,11 +77,14 @@ def make_train_step(agent_apply: Callable, opt, train_cfg):
             is_replay=batch.get("is_replay"),
             behavior_values=batch.get("behavior_value"),
             clear_policy_cost=train_cfg.clear_policy_cost,
-            clear_value_cost=train_cfg.clear_value_cost)
+            clear_value_cost=train_cfg.clear_value_cost,
+            vtrace_impl=vtrace_impl)
         return loss_out.total, loss_out
 
     def train_step(params, opt_state, step, batch):
+        batch = shard_batch(batch)
         grads, loss_out = jax.grad(loss_fn, has_aux=True)(params, batch)
+        grads = shard_grads(grads)
         updates, opt_state = opt.update(grads, opt_state, params, step)
         params = apply_updates(params, updates)
         if "is_replay" in batch:
@@ -87,10 +111,13 @@ def make_train_step(agent_apply: Callable, opt, train_cfg):
     return train_step
 
 
-def make_recurrent_train_step(agent_apply, opt, train_cfg):
+def make_recurrent_train_step(agent_apply, opt, train_cfg, *,
+                              mesh=None, rules=None, vtrace_impl="scan"):
     """IMPALA learner for recurrent agents: re-runs the LSTM over the
     unroll from the stored initial core_state (TorchBeast's learner does
-    exactly this), then V-trace as usual. batch adds "core_state"."""
+    exactly this), then V-trace as usual. batch adds "core_state".
+    mesh/rules/vtrace_impl as in ``make_train_step``."""
+    shard_batch, shard_grads = _make_shard_fns(mesh, rules)
 
     def loss_fn(params, batch):
         def step(core_state, xs):
@@ -114,11 +141,14 @@ def make_recurrent_train_step(agent_apply, opt, train_cfg):
             baseline_cost=train_cfg.baseline_cost,
             entropy_cost=train_cfg.entropy_cost,
             clip_rho=train_cfg.vtrace_rho_clip,
-            clip_c=train_cfg.vtrace_c_clip)
+            clip_c=train_cfg.vtrace_c_clip,
+            vtrace_impl=vtrace_impl)
         return loss_out.total, loss_out
 
     def train_step(params, opt_state, step, batch):
+        batch = shard_batch(batch)
         grads, loss_out = jax.grad(loss_fn, has_aux=True)(params, batch)
+        grads = shard_grads(grads)
         updates, opt_state = opt.update(grads, opt_state, params, step)
         params = apply_updates(params, updates)
         metrics = {"loss": loss_out.total, "pg_loss": loss_out.pg_loss,
@@ -130,13 +160,14 @@ def make_recurrent_train_step(agent_apply, opt, train_cfg):
 
 
 def make_lm_train_step(cfg, opt, train_cfg, loss_chunk=512,
-                       grad_constraint=None):
+                       grad_constraint=None, vtrace_impl="scan"):
     """IMPALA learner step for LLM policies (DESIGN.md §2).
 
     grad_constraint: optional fn(grads)->grads applied right after jax.grad
     — the launcher passes a ZeRO-2 sharding constraint here so the gradient
     all-reduce becomes a reduce-scatter and the fp32 optimizer temporaries
     stay sharded over the data axes.
+    vtrace_impl: 'scan' or 'kernel' (the Pallas V-trace recursion).
 
     batch (batch-major; transposed internally for V-trace):
       tokens            (B, S+1) int32   obs[0..S]; actions are tokens[1:]
@@ -169,7 +200,8 @@ def make_lm_train_step(cfg, opt, train_cfg, loss_chunk=512,
             baseline_cost=train_cfg.baseline_cost,
             entropy_cost=train_cfg.entropy_cost,
             clip_rho=train_cfg.vtrace_rho_clip,
-            clip_c=train_cfg.vtrace_c_clip)
+            clip_c=train_cfg.vtrace_c_clip,
+            vtrace_impl=vtrace_impl)
         lb, zl, _ = aux
         total = loss_out.total + cfg.router_aux_weight * lb \
             + cfg.router_z_weight * zl

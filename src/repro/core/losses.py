@@ -39,6 +39,20 @@ def _reduce(x, reduce):
     return jnp.sum(x) if reduce == "sum" else jnp.sum(jnp.mean(x, axis=1))
 
 
+def _vtrace_fn(vtrace_impl):
+    """Resolve the V-trace recursion implementation: the reverse-scan
+    reference ('scan') or the Pallas TPU kernel ('kernel',
+    kernels/vtrace.py — interpret-mode on CPU, same recursion blocked over
+    128-wide batch lanes held in VMEM)."""
+    if vtrace_impl == "scan":
+        return vtrace_lib.vtrace_from_importance_weights
+    if vtrace_impl == "kernel":
+        from repro.kernels import ops
+        return ops.vtrace_from_importance_weights_kernel
+    raise ValueError(f"vtrace_impl must be 'scan' or 'kernel': "
+                     f"{vtrace_impl!r}")
+
+
 def clear_auxiliary_loss(target_lp_all, behavior_logits, values,
                          behavior_values, is_replay, *, reduce="mean"):
     """CLEAR-style behavioral + value cloning on replayed rows only
@@ -76,7 +90,8 @@ def impala_loss_from_logits(target_logits, behavior_logits, actions,
                             *, baseline_cost=0.5, entropy_cost=0.01,
                             clip_rho=1.0, clip_c=1.0, reduce="mean",
                             is_replay=None, behavior_values=None,
-                            clear_policy_cost=0.0, clear_value_cost=0.0):
+                            clear_policy_cost=0.0, clear_value_cost=0.0,
+                            vtrace_impl="scan"):
     """Paper-faithful path (full logits, small action spaces). All (T,B,...).
 
     target_logits/values carry gradients; behavior_* are data.
@@ -85,13 +100,15 @@ def impala_loss_from_logits(target_logits, behavior_logits, actions,
     for those columns (core/replay.py). behavior_values (T,B): the acting
     network's value estimates recorded at generation time — the
     value-cloning anchor (without it only policy cloning is applied).
+    vtrace_impl: 'scan' (reverse-scan reference) or 'kernel' (the Pallas
+    V-trace recursion, interpret-mode on CPU).
     """
     target_lp_all = jax.nn.log_softmax(target_logits.astype(jnp.float32), -1)
     target_lp = jnp.take_along_axis(target_lp_all, actions[..., None],
                                     axis=-1)[..., 0]
     behavior_lp = vtrace_lib._action_log_probs(behavior_logits, actions)
 
-    vt = vtrace_lib.vtrace_from_importance_weights(
+    vt = _vtrace_fn(vtrace_impl)(
         jax.lax.stop_gradient(target_lp) - behavior_lp, discounts, rewards,
         jax.lax.stop_gradient(values), bootstrap_value,
         clip_rho_threshold=clip_rho, clip_c_threshold=clip_c)
@@ -123,13 +140,13 @@ def impala_loss_from_logprobs(target_logprobs, target_entropy,
                               behavior_logprobs, rewards, discounts, values,
                               bootstrap_value, *, baseline_cost=0.5,
                               entropy_cost=0.01, clip_rho=1.0, clip_c=1.0,
-                              reduce="mean"):
+                              reduce="mean", vtrace_impl="scan"):
     """LLM-scale path: (T,B) chosen-action log-probs + per-step entropy
     (computed chunked by the caller). target_logprobs/values/target_entropy
-    carry gradients."""
-    vt = vtrace_lib.vtrace_from_logprobs(
-        behavior_logprobs, jax.lax.stop_gradient(target_logprobs), discounts,
-        rewards, jax.lax.stop_gradient(values), bootstrap_value,
+    carry gradients. vtrace_impl as in ``impala_loss_from_logits``."""
+    vt = _vtrace_fn(vtrace_impl)(
+        jax.lax.stop_gradient(target_logprobs) - behavior_logprobs,
+        discounts, rewards, jax.lax.stop_gradient(values), bootstrap_value,
         clip_rho_threshold=clip_rho, clip_c_threshold=clip_c)
     pg_loss = _reduce(-target_logprobs * vt.pg_advantages, reduce)
     baseline_loss = 0.5 * _reduce(jnp.square(vt.vs - values), reduce)

@@ -86,8 +86,8 @@ def check_rollout(rollout: Dict[str, Any], unroll_length: int,
 # Compiled on-device actors
 
 
-class DeviceSource:
-    """Compiled-unroll source with optional double-buffered dispatch.
+class _CompiledUnrollSource:
+    """Shared dispatch cadence for compiled-unroll sources.
 
     Synchronous (``pipelined=False``): ``next_batch(params)`` dispatches one
     unroll with the given params and returns it — unroll N sees the params
@@ -104,45 +104,30 @@ class DeviceSource:
 
     ``param_sync_every=k`` refreshes the behavior params only every k-th
     dispatch — the actor-lag knob used by examples/vtrace_ablation.py.
+
+    Subclasses implement ``_sync_behavior(params)`` (how learner params
+    become the held behavior params) and ``_unroll_once()`` (advance the
+    carry/key state one unroll using ``self._behavior_params``).
     """
 
-    def __init__(self, unroll: Callable, carry, key, *,
-                 unroll_length: int, batch_size: int,
-                 pipelined: bool = True, param_sync_every: int = 1,
-                 donate: Optional[bool] = None):
-        if donate is None:  # buffer donation is a no-op (and noisy) on CPU
-            donate = jax.default_backend() != "cpu"
-        self._unroll = jax.jit(unroll, donate_argnums=(1,) if donate else ())
-        self._carry = carry
-        self._key = key
-        self.unroll_length = unroll_length
-        self.batch_size = batch_size
-        self.frames_per_batch = unroll_length * batch_size
+    def _init_dispatch(self, *, pipelined: bool, param_sync_every: int):
         self.pipelined = pipelined
         self.param_sync_every = max(1, param_sync_every)
         self._behavior_params = None
         self._dispatches = 0
         self._pending = None
 
-    @classmethod
-    def for_env(cls, env, apply_fn, *, unroll_length: int, batch_size: int,
-                key, **kwargs) -> "DeviceSource":
-        """Build the feed-forward-agent source from an Env + apply_fn."""
-        from repro.core import rollout as rollout_lib
-        key, k_reset = jax.random.split(key)
-        carry = rollout_lib.env_reset_batch(env, k_reset, batch_size)
-        unroll = rollout_lib.make_unroll(env, apply_fn, unroll_length)
-        return cls(unroll, carry, key, unroll_length=unroll_length,
-                   batch_size=batch_size, **kwargs)
+    def _sync_behavior(self, params):
+        raise NotImplementedError
+
+    def _unroll_once(self):
+        raise NotImplementedError
 
     def _dispatch(self, params):
         if self._dispatches % self.param_sync_every == 0:
-            self._behavior_params = params
+            self._behavior_params = self._sync_behavior(params)
         self._dispatches += 1
-        self._key, k = jax.random.split(self._key)
-        self._carry, rollout = self._unroll(self._behavior_params,
-                                            self._carry, k)
-        return rollout
+        return self._unroll_once()
 
     def start(self, params) -> None:
         del params  # first dispatch happens lazily in next_batch
@@ -156,7 +141,170 @@ class DeviceSource:
         return rollout
 
     def stop(self) -> None:
+        """Drop the in-flight rollout AND the dispatch/behavior-param state:
+        a stop/start cycle must behave like a fresh source, not resume the
+        ``param_sync_every`` cadence with last run's stale parameters."""
         self._pending = None
+        self._behavior_params = None
+        self._dispatches = 0
+
+
+class DeviceSource(_CompiledUnrollSource):
+    """Single-device compiled-unroll source (see _CompiledUnrollSource for
+    the pipelining/param-sync semantics)."""
+
+    def __init__(self, unroll: Callable, carry, key, *,
+                 unroll_length: int, batch_size: int,
+                 pipelined: bool = True, param_sync_every: int = 1,
+                 donate: Optional[bool] = None):
+        if donate is None:  # buffer donation is a no-op (and noisy) on CPU
+            donate = jax.default_backend() != "cpu"
+        self._unroll = jax.jit(unroll, donate_argnums=(1,) if donate else ())
+        self._carry = carry
+        self._key = key
+        self.unroll_length = unroll_length
+        self.batch_size = batch_size
+        self.frames_per_batch = unroll_length * batch_size
+        self._init_dispatch(pipelined=pipelined,
+                            param_sync_every=param_sync_every)
+
+    @classmethod
+    def for_env(cls, env, apply_fn, *, unroll_length: int, batch_size: int,
+                key, **kwargs) -> "DeviceSource":
+        """Build the feed-forward-agent source from an Env + apply_fn."""
+        from repro.core import rollout as rollout_lib
+        key, k_reset = jax.random.split(key)
+        carry = rollout_lib.env_reset_batch(env, k_reset, batch_size)
+        unroll = rollout_lib.make_unroll(env, apply_fn, unroll_length)
+        return cls(unroll, carry, key, unroll_length=unroll_length,
+                   batch_size=batch_size, **kwargs)
+
+    def _sync_behavior(self, params):
+        return params
+
+    def _unroll_once(self):
+        self._key, k = jax.random.split(self._key)
+        self._carry, rollout = self._unroll(self._behavior_params,
+                                            self._carry, k)
+        return rollout
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel sharded actors (one stream per mesh data-axis device)
+
+
+class ShardedDeviceSource(_CompiledUnrollSource):
+    """N independent compiled actor streams — one per device of a 1-D
+    ("data",) mesh — fanned into ONE globally-sharded rollout batch.
+
+    Each device owns its slice of the global batch: an independent env
+    carry, RNG key stream and compiled unroll, all resident on that device.
+    ``next_batch`` dispatches every per-device unroll and assembles the
+    global (T, B_global, ...) batch with
+    ``jax.make_array_from_single_device_arrays`` — a metadata-only
+    operation, so there is no host-side concatenation and no cross-device
+    traffic: the learner step consumes the batch exactly where it was
+    produced, sharded over the mesh data axis.
+
+    Double buffering (``pipelined``) and the actor-lag knob
+    (``param_sync_every``) come from _CompiledUnrollSource; at mesh size 1
+    the emitted rollout stream is bit-identical to ``DeviceSource``'s
+    (same key-split sequence — the mesh-1 parity guarantee of the sharded
+    learner).
+    """
+
+    def __init__(self, unroll: Callable, carries, keys, mesh, *,
+                 unroll_length: int, batch_size: int,
+                 pipelined: bool = True, param_sync_every: int = 1,
+                 donate: Optional[bool] = None):
+        from jax.sharding import NamedSharding, PartitionSpec
+        self._mesh = mesh
+        self._devices = list(mesh.devices.reshape(-1))
+        if len(carries) != len(self._devices):
+            raise ValueError(f"{len(carries)} carries for "
+                             f"{len(self._devices)} mesh devices")
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        self._unroll = jax.jit(unroll, donate_argnums=(1,) if donate else ())
+        self._carries = list(carries)
+        self._keys = list(keys)
+        self.unroll_length = unroll_length
+        self.batch_size = batch_size
+        self.frames_per_batch = unroll_length * batch_size
+        self._init_dispatch(pipelined=pipelined,
+                            param_sync_every=param_sync_every)
+        daxes = tuple(mesh.axis_names)
+        self._shardings = {
+            nd: NamedSharding(mesh, PartitionSpec(
+                *([None, daxes if len(daxes) > 1 else daxes[0]]
+                  + [None] * (nd - 2))))
+            for nd in (2, 3, 4, 5, 6)}
+
+    @classmethod
+    def for_env(cls, env, apply_fn, *, unroll_length: int, batch_size: int,
+                key, mesh, **kwargs) -> "ShardedDeviceSource":
+        """Per-device actor streams for an Env + apply_fn over ``mesh``.
+
+        ``batch_size`` is GLOBAL and must divide by the mesh size; device 0
+        reuses the base key stream (mesh-1 bit-parity with
+        ``DeviceSource.for_env``), devices d>0 fold ``d`` into it.
+        """
+        from repro.core import rollout as rollout_lib
+        devices = list(mesh.devices.reshape(-1))
+        n = len(devices)
+        if batch_size % n != 0:
+            raise ValueError(f"global batch {batch_size} not divisible by "
+                             f"mesh size {n}")
+        b_local = batch_size // n
+        key, k_reset = jax.random.split(key)
+        carries, keys = [], []
+        for d, dev in enumerate(devices):
+            k_d = key if d == 0 else jax.random.fold_in(key, d)
+            kr_d = k_reset if d == 0 else jax.random.fold_in(k_reset, d)
+            carries.append(jax.device_put(
+                rollout_lib.env_reset_batch(env, kr_d, b_local), dev))
+            keys.append(jax.device_put(k_d, dev))
+        unroll = rollout_lib.make_unroll(env, apply_fn, unroll_length)
+        return cls(unroll, carries, keys, mesh,
+                   unroll_length=unroll_length, batch_size=batch_size,
+                   **kwargs)
+
+    def _params_on(self, params, dev):
+        """A single-device view of ``params`` on ``dev`` — a zero-copy
+        shard view when the params are mesh-replicated arrays, a transfer
+        only when they live elsewhere."""
+
+        def one(x):
+            if isinstance(x, jax.Array):
+                for s in x.addressable_shards:
+                    if s.device == dev and s.data.shape == x.shape:
+                        return s.data
+            return jax.device_put(x, dev)
+
+        return jax.tree.map(one, params)
+
+    def _sync_behavior(self, params):
+        return [self._params_on(params, dev) for dev in self._devices]
+
+    def _unroll_once(self):
+        shards = []
+        for i in range(len(self._devices)):
+            self._keys[i], k = jax.random.split(self._keys[i])
+            self._carries[i], rollout = self._unroll(
+                self._behavior_params[i], self._carries[i], k)
+            shards.append(rollout)
+        return self._assemble(shards)
+
+    def _assemble(self, shards):
+        n = len(self._devices)
+
+        def one(*leaves):
+            x = leaves[0]
+            shape = (x.shape[0], x.shape[1] * n) + x.shape[2:]
+            return jax.make_array_from_single_device_arrays(
+                shape, self._shardings[x.ndim], list(leaves))
+
+        return jax.tree.map(one, *shards)
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,7 @@ import threading
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _ctx = threading.local()
@@ -54,6 +55,21 @@ FSDP_SEQPAR_RULES = dict(MEGATRON_RULES, embed="batch", act_seq="model")
 CP_FSDP_SEQPAR_RULES = dict(FSDP_SEQPAR_RULES, attn_pref="seq")
 EXPERT_SEQPAR_RULES = dict(SEQPAR_RULES, expert="model", mlp=None)
 
+# RL-agent data parallelism: the convnet agents (models/convnet.py) are
+# tiny, so every parameter axis is replicated and only the rollout batch is
+# sharded over the data axes. Gradients of replicated params w.r.t. a
+# data-sharded batch all-reduce automatically under sharding propagation —
+# the data-parallel learner needs no explicit pmean.
+RL_AGENT_RULES: Dict[str, object] = {
+    "conv_h": None,
+    "conv_w": None,
+    "conv_in": None,
+    "conv_out": None,
+    "fc_in": None,
+    "fc_out": None,
+    "act_batch": "batch",
+}
+
 RULE_SETS = {
     "megatron": MEGATRON_RULES,
     "fsdp": FSDP_RULES,
@@ -62,6 +78,7 @@ RULE_SETS = {
     "cp_fsdp_seqpar": CP_FSDP_SEQPAR_RULES,
     "expert": EXPERT_RULES,
     "expert_seqpar": EXPERT_SEQPAR_RULES,
+    "rl_agent": RL_AGENT_RULES,
 }
 
 
@@ -230,6 +247,64 @@ def constrain_attention(x, *, seq_dim=1, head_dim=2, batch_dim=0):
 # ---------------------------------------------------------------------------
 # ZeRO-1: shard optimizer state over the data axes on top of param sharding
 # ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
+# Data-parallel rollout batches (the sharded IMPALA learner)
+# ---------------------------------------------------------------------------
+
+# Canonical time-major rollouts (core/sources.py) put the batch on dim 1
+# (obs (T+1,B,...), action (T,B), ...); the exceptions are per-column
+# vectors (is_replay (B,)) and recurrent core_state leaves ((B, hidden)).
+_BATCH_DIM_OVERRIDES = {"is_replay": 0, "core_state": 0}
+
+
+def batch_axes_spec(mesh: Mesh, rules: Dict, ndim: int, shape,
+                    batch_dim: int) -> Optional[P]:
+    """PartitionSpec sharding ``batch_dim`` over the data axes named by the
+    rules' 'act_batch' entry (replicated when non-divisible / unmapped)."""
+    rule = _resolve(rules.get("act_batch", "batch"), mesh)
+    if rule is None:
+        return None
+    mesh_axes = rule if isinstance(rule, tuple) else (rule,)
+    size = 1
+    for a in mesh_axes:
+        size *= mesh.shape[a]
+    if size == 1 or shape[batch_dim] % size != 0:
+        return None
+    parts = [None] * ndim
+    parts[batch_dim] = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+    return P(*parts)
+
+
+def shard_rollout(batch, mesh: Mesh, rules: Dict):
+    """Constrain every leaf of a canonical rollout batch to be sharded over
+    the data axes on its batch dimension (replicated everywhere else).
+
+    Inside a jitted learner step this pins the batch layout so gradient
+    all-reduce falls out of sharding propagation; leaves whose batch size
+    does not divide the data-axis size stay replicated.
+    """
+
+    def leaf(key, x):
+        bd = _BATCH_DIM_OVERRIDES.get(key, 1 if jnp.ndim(x) >= 2 else 0)
+        spec = batch_axes_spec(mesh, rules, jnp.ndim(x), jnp.shape(x), bd)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return {k: jax.tree.map(lambda x, k=k: leaf(k, x), v)
+            for k, v in batch.items()}
+
+
+def replicate(tree, mesh: Mesh):
+    """Constrain every leaf of ``tree`` to be fully replicated on ``mesh``
+    (applied to grads in the sharded learner step: the constraint is where
+    GSPMD materialises the cross-data-axis all-reduce)."""
+    sharding = NamedSharding(mesh, P())
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, sharding), tree)
+
 
 def zero1_shardings(axes_tree, shapes_tree, mesh: Mesh, rules: Dict):
     """Optimizer-state shardings: like params, but each leaf additionally

@@ -14,10 +14,19 @@ from __future__ import annotations
 import jax
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, devices=None):
     """``jax.make_mesh`` with Auto axis types where this jax supports them
-    (``jax.sharding.AxisType`` does not exist on older 0.4.x releases)."""
+    (``jax.sharding.AxisType`` does not exist on older 0.4.x releases).
+    ``devices``: optional explicit device array (defaults to all local
+    devices, as ``jax.make_mesh`` does)."""
     axis_type = getattr(jax.sharding, "AxisType", None)
+    if devices is not None:
+        import numpy as np
+        devices = np.asarray(devices).reshape(shape)
+        if axis_type is None:
+            return jax.sharding.Mesh(devices, axes)
+        return jax.sharding.Mesh(devices, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
     if axis_type is None:
         return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
@@ -34,6 +43,19 @@ def make_host_mesh():
     """Whatever devices exist locally, as a 1-D 'data' mesh (CPU tests)."""
     n = len(jax.devices())
     return make_mesh((n,), ("data",))
+
+
+def make_data_mesh(n=None):
+    """The first ``n`` local devices as a 1-D ("data",) mesh — the
+    data-parallel RL learner mesh (``--mesh-data N``). On CPU, run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to get N>1."""
+    devices = jax.devices()
+    n = len(devices) if n is None else n
+    if n > len(devices):
+        raise ValueError(
+            f"--mesh-data {n} but only {len(devices)} devices visible "
+            "(on CPU set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return make_mesh((n,), ("data",), devices=devices[:n])
 
 
 # Hardware constants for the roofline model (TPU v5e)

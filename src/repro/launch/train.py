@@ -60,11 +60,26 @@ def build_rl_agent(args):
     params, _ = init_agent(init_fn, jax.random.PRNGKey(train_cfg.seed))
     opt = make_optimizer(train_cfg)
 
+    mesh = None
+    if args.mesh_data:
+        if args.actors == "host" or args.replay != "off":
+            raise SystemExit("--mesh-data composes with the default "
+                             "on-device actors only (no --actors host / "
+                             "--replay)")
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(args.mesh_data)
+
     if args.actors == "host":
         source = sources_lib.HostLoopSource(
             env, apply_fn, num_actors=train_cfg.num_actors,
             unroll_length=train_cfg.unroll_length,
             batch_size=train_cfg.batch_size, seed=train_cfg.seed)
+    elif mesh is not None:
+        source = sources_lib.ShardedDeviceSource.for_env(
+            env, apply_fn, unroll_length=train_cfg.unroll_length,
+            batch_size=train_cfg.batch_size,
+            key=jax.random.PRNGKey(train_cfg.seed + 1),
+            mesh=mesh, pipelined=not args.sync)
     else:
         source = sources_lib.DeviceSource.for_env(
             env, apply_fn, unroll_length=train_cfg.unroll_length,
@@ -77,9 +92,19 @@ def build_rl_agent(args):
             source, replay_lib.make_buffer(args.replay, args.replay_capacity),
             replay_ratio=args.replay_ratio, seed=train_cfg.seed,
             value_fn=jax.jit(lambda p, obs: apply_fn(p, obs).baseline))
-    step_fn = jax.jit(learner_lib.make_train_step(apply_fn, opt, train_cfg))
-    return source, step_fn, params, opt.init(params), {
-        "log_keys": ("reward_per_step", "loss")}
+    step_fn = jax.jit(learner_lib.make_train_step(
+        apply_fn, opt, train_cfg, mesh=mesh,
+        vtrace_impl=args.vtrace_impl))
+    extras = {"log_keys": ("reward_per_step", "loss")}
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        # learner state lives replicated on the mesh; the source reads
+        # per-device shard views of it with zero copies.
+        placement = lambda tree: jax.device_put(  # noqa: E731
+            tree, NamedSharding(mesh, PartitionSpec()))
+        params = placement(params)
+        extras["placement"] = placement
+    return source, step_fn, params, opt.init(params), extras
 
 
 def build_lm_rl(args):
@@ -94,7 +119,8 @@ def build_lm_rl(args):
         key=jax.random.PRNGKey(7))
     step_fn = jax.jit(sources_lib.lm_rl_step_from_rollout(
         learner_lib.make_lm_train_step(cfg, opt, train_cfg,
-                                       loss_chunk=args.seq)))
+                                       loss_chunk=args.seq,
+                                       vtrace_impl=args.vtrace_impl)))
     return source, step_fn, params, opt.init(params), {
         "log_keys": ("reward_per_step", "pg_loss", "entropy_loss")}
 
@@ -144,6 +170,20 @@ def main(argv=None):
                         "MonoBeast host actor loop")
     p.add_argument("--sync", action="store_true",
                    help="disable double-buffered rollout dispatch")
+    p.add_argument("--mesh-data", type=int, default=None, metavar="N",
+                   help="rl-agent only: data-parallel learner over a 1-D "
+                        "('data',) mesh of N devices (ShardedDeviceSource "
+                        "+ sharded train step; on CPU set XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=N)")
+    p.add_argument("--vtrace-impl", choices=["scan", "kernel"],
+                   default="scan",
+                   help="rl-agent/lm-rl: V-trace recursion — reverse-scan "
+                        "reference or the Pallas TPU kernel "
+                        "(interpret-mode on CPU); ignored by --mode lm")
+    p.add_argument("--resume", action="store_true",
+                   help="restore {params, opt_state, step} from the latest "
+                        "checkpoint in --checkpoint-dir and continue from "
+                        "the saved step (LR schedule intact)")
     p.add_argument("--replay", default="off",
                    choices=["off", "uniform", "elite", "attentive"],
                    help="rl-agent only: mix replayed rollouts into every "
@@ -162,8 +202,27 @@ def main(argv=None):
     args = p.parse_args(argv)
 
     source, step_fn, params, opt_state, extras = _BUILDERS[args.mode](args)
+    placement = extras.pop("placement", None)
+    start_step = 0
+    if args.resume:
+        if not args.checkpoint_dir:
+            p.error("--resume requires --checkpoint-dir")
+        from repro import checkpoint as ckpt_lib
+        path = ckpt_lib.latest_step_path(args.checkpoint_dir)
+        if path is None:
+            print(f"--resume: no checkpoint under {args.checkpoint_dir}, "
+                  "starting fresh")
+        else:
+            restored, meta = ckpt_lib.restore(
+                path, {"params": params, "opt_state": opt_state})
+            place = placement or (
+                lambda tree: jax.tree.map(jnp.asarray, tree))
+            params = place(restored["params"])
+            opt_state = place(restored["opt_state"])
+            start_step = int(meta.get("step", 0))
+            print(f"resumed {path} at step {start_step}")
     runtime = Runtime(source, step_fn, params, opt_state,
-                      total_steps=args.steps,
+                      total_steps=args.steps, start_step=start_step,
                       checkpoint_dir=args.checkpoint_dir, **extras)
     runtime.run()
     return runtime.params
