@@ -292,16 +292,20 @@ def bench_replay():
 
 def bench_scaling(steps=40):
     """Data-parallel learner scaling: rollout+learn FPS vs mesh size for
-    1/2/4/8 devices (weak scaling: 32 batch columns per device). On CPU run
-    under XLA_FLAGS=--xla_force_host_platform_device_count=8 — ``main``
-    sets it automatically when scaling is the SOLE suite requested (mixing
-    it with other suites would skew their timings); otherwise the curve is
-    truncated to the visible device count."""
+    1/2/4/8 devices (weak scaling: 32 batch columns per device), plain and
+    composed with the per-device-sliced replay buffer (``scaling_replay_*``
+    rows — the sharded+replay FPS must stay close to sharded-only: the
+    composition adds slot bookkeeping, not host-side concat/resharding).
+    On CPU run under XLA_FLAGS=--xla_force_host_platform_device_count=8 —
+    ``main`` sets it automatically when scaling is the SOLE suite requested
+    (mixing it with other suites would skew their timings); otherwise the
+    curve is truncated to the visible device count."""
     if SMALL:
         steps = 12
     from repro.configs.atari_impala import small_train
     from repro.core import learner as L
-    from repro.core.sources import ShardedDeviceSource
+    from repro.core.replay import ShardedReplay
+    from repro.core.sources import ReplaySource, ShardedDeviceSource
     from repro.distributed.sharding import RL_AGENT_RULES
     from repro.envs import catch
     from repro.launch.mesh import make_data_mesh
@@ -313,7 +317,8 @@ def bench_scaling(steps=40):
     n_dev = len(jax.devices())
     counts = [n for n in (1, 2, 4, 8) if n <= n_dev]
     per_device_batch = 32
-    for n in counts:
+
+    def arm(n, replay):
         mesh = make_data_mesh(n)
         tc = small_train(unroll_length=20, batch_size=per_device_batch * n)
         init_fn, apply_fn = minatar_net(env.obs_shape, env.num_actions)
@@ -327,6 +332,10 @@ def bench_scaling(steps=40):
             env, apply_fn, unroll_length=tc.unroll_length,
             batch_size=tc.batch_size, key=jax.random.PRNGKey(1), mesh=mesh,
             pipelined=True)
+        if replay:
+            source = ReplaySource(
+                source, ShardedReplay("uniform", 16 * n, mesh),
+                replay_ratio=0.25)
         m = None
         for s in range(4):  # warmup: compile per-device unrolls + step
             batch = source.next_batch(params)
@@ -342,8 +351,16 @@ def bench_scaling(steps=40):
         dt = time.perf_counter() - t0
         source.stop()
         fps = steps * source.frames_per_batch / dt
+        return fps, dt, tc.batch_size
+
+    for n in counts:
+        fps, dt, bsz = arm(n, replay=False)
         row(f"scaling_n{n}_catch", dt / steps * 1e6,
-            f"{fps:.0f}fps {fps / n:.0f}fps/dev B={tc.batch_size}")
+            f"{fps:.0f}fps {fps / n:.0f}fps/dev B={bsz}")
+        fps_r, dt_r, _ = arm(n, replay=True)
+        row(f"scaling_replay_n{n}_catch", dt_r / steps * 1e6,
+            f"{fps_r:.0f}fps {fps_r / max(fps, 1e-9) * 100:.0f}%_of_plain "
+            f"ratio=0.25")
 
 
 def bench_fps_host_loop(duration=6.0):

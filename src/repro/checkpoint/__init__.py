@@ -1,1 +1,2 @@
-from repro.checkpoint.checkpoint import latest_step_path, restore, save  # noqa: F401
+from repro.checkpoint.checkpoint import (latest_step_path, restore,  # noqa: F401
+                                         restore_structured, save)

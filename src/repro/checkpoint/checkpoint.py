@@ -2,6 +2,18 @@
 
 Flattens the (params, opt_state, step, ...) tree with '/'-joined key paths;
 restores into the same structure. Atomic via write-to-temp + rename.
+
+Two layers:
+
+* ``save``/``restore`` — fixed-structure trees (params/opt_state), restored
+  into a ``like`` template. This is the learner-state path.
+* ``structured=``/``restore_structured`` — SELF-DESCRIBING trees whose shape
+  is only known at save time (RolloutSource ``state_dict()``s: env carries,
+  RNG streams, replay-buffer slots, in-flight rollouts — any nesting of
+  dict/list/tuple/None/scalar/array). The structure rides along as a JSON
+  schema in the same .npz, so ``restore_structured`` needs no template and
+  checkpoints written before a source grew state restore cleanly (returns
+  ``None``).
 """
 
 from __future__ import annotations
@@ -31,8 +43,63 @@ def _key_str(k):
     return str(k)
 
 
-def save(path: str, tree, metadata: dict | None = None) -> None:
+# -- self-describing trees (source state) -----------------------------------
+
+_SCHEMA_KEY = "__structured_schema__"
+_STRUCT_PREFIX = "__structured__/"
+
+
+def _encode(obj, flat: Dict[str, Any], path: str) -> dict:
+    """Encode an arbitrary pytree into (flat arrays, JSON schema). Scalars
+    live in the schema; array leaves go to ``flat`` under ``path``.
+    NamedTuples degrade to plain tuples — restore against a live template
+    (tree_unflatten) when the node type matters."""
+    if obj is None:
+        return {"t": "none"}
+    if isinstance(obj, (bool, int, float, str)):
+        return {"t": "py", "v": obj}
+    if isinstance(obj, (np.integer, np.floating, np.bool_)):
+        return {"t": "py", "v": obj.item()}
+    if isinstance(obj, dict):
+        return {"t": "dict", "items": {
+            str(k): _encode(v, flat, f"{path}/{k}") for k, v in obj.items()}}
+    if isinstance(obj, (list, tuple)):
+        return {"t": "tuple" if isinstance(obj, tuple) else "list",
+                "items": [_encode(v, flat, f"{path}/{i}")
+                          for i, v in enumerate(obj)]}
+    arr = np.asarray(obj)
+    if arr.dtype == object:
+        raise TypeError(f"cannot checkpoint object-dtype leaf at {path!r}")
+    flat[path] = arr
+    return {"t": "arr", "k": path}
+
+
+def _decode(node: dict, data) -> Any:
+    t = node["t"]
+    if t == "none":
+        return None
+    if t == "py":
+        return node["v"]
+    if t == "dict":
+        return {k: _decode(v, data) for k, v in node["items"].items()}
+    if t == "list":
+        return [_decode(v, data) for v in node["items"]]
+    if t == "tuple":
+        return tuple(_decode(v, data) for v in node["items"])
+    if t == "arr":
+        return np.asarray(data[node["k"]])
+    raise ValueError(f"unknown schema node type {t!r}")
+
+
+def save(path: str, tree, metadata: dict | None = None,
+         structured: Dict[str, Any] | None = None) -> None:
+    """``structured``: optional name -> self-describing pytree (see module
+    docstring); read back with ``restore_structured(path, name)``."""
     flat = _flatten(tree)
+    if structured:
+        schemas = {name: _encode(obj, flat, _STRUCT_PREFIX + name)
+                   for name, obj in structured.items()}
+        flat[_SCHEMA_KEY] = json.dumps(schemas)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
                                suffix=".tmp")
@@ -62,6 +129,19 @@ def restore(path: str, like):
             leaves.append(arr)
         meta = json.loads(str(data["__metadata__"]))
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def restore_structured(path: str, name: str):
+    """Restore a self-describing tree saved via ``save(..., structured=
+    {name: tree})``; ``None`` when the checkpoint predates it (old
+    checkpoints stay restorable — the caller starts that piece fresh)."""
+    with np.load(path, allow_pickle=False) as data:
+        if _SCHEMA_KEY not in data:
+            return None
+        schemas = json.loads(str(data[_SCHEMA_KEY]))
+        if name not in schemas:
+            return None
+        return _decode(schemas[name], data)
 
 
 def latest_step_path(ckpt_dir: str):

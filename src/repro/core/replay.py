@@ -27,6 +27,19 @@ The learner feeds priorities back through
 emits a per-column ``priority`` metric (mean |pg_advantage|), and the
 source routes it to ``update_priorities`` for every slot that contributed
 to the batch.
+
+``ShardedReplay`` composes any strategy with the data-parallel learner
+(``--mesh-data N --replay ...``): slot storage is PARTITIONED per mesh
+device (one strategy buffer per device, holding only that device's batch
+columns), and sampled columns are re-assembled into a globally-sharded
+batch with ``jax.make_array_from_single_device_arrays`` — each device
+receives only its own slice, so the hot path never concatenates or
+re-shards the global batch on the host.
+
+Buffers are stateful, checkpointable objects: ``state_dict()`` /
+``load_state_dict()`` capture slots, priorities, tickets and counters, so
+a resumed run replays exactly what the uninterrupted run would have
+(the SourceState protocol of core/sources.py).
 """
 
 from __future__ import annotations
@@ -34,6 +47,8 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Protocol, Tuple, \
     runtime_checkable
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 Rollout = Dict[str, Any]
@@ -48,6 +63,8 @@ class ReplayBuffer(Protocol):
     full), returning the slot ids in column order. ``sample`` returns a
     stacked ``(T, k, ...)`` rollout plus the slot ids it was drawn from.
     ``update_priorities`` is the learner feedback path.
+    ``state_dict``/``load_state_dict`` checkpoint the buffer (slots,
+    priorities, tickets) for the SourceState resume protocol.
     """
 
     capacity: int
@@ -65,6 +82,10 @@ class ReplayBuffer(Protocol):
     def stats(self) -> Dict[str, float]: ...
 
     def clear(self) -> None: ...
+
+    def state_dict(self) -> Dict[str, Any]: ...
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None: ...
 
 
 def _obs_feature(obs_col: np.ndarray) -> np.ndarray:
@@ -213,6 +234,57 @@ class _SlotReplay:
         self._slot_of_ticket.clear()
         self._free = list(range(self.capacity))
 
+    # -- checkpoint/restore (SourceState protocol) -----------------------------
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Everything a resumed run needs to sample/evict/score exactly as
+        the uninterrupted run would: slot contents, priorities, insertion
+        sequence, live ticket map and counters."""
+        tickets = np.asarray(sorted(self._slot_of_ticket.items()),
+                             np.int64).reshape(-1, 2)
+        return {
+            "kind": type(self).__name__,
+            "capacity": self.capacity,
+            "arrays": None if self._arrays is None else
+                      {k: v.copy() for k, v in self._arrays.items()},
+            "feat": None if self._feat is None else self._feat.copy(),
+            "free": np.asarray(self._free, np.int64),
+            "live": self._live.copy(),
+            "prio": self._prio.copy(),
+            "seq": self._seq.copy(),
+            "next_seq": self._next_seq,
+            "tickets": tickets,
+            "inserted": self.inserted,
+            "evicted": self.evicted,
+            "sampled": self.sampled,
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        if state.get("kind") != type(self).__name__:
+            raise ValueError(
+                f"checkpoint replay buffer is {state.get('kind')!r}, this "
+                f"run built {type(self).__name__} — resume with the same "
+                "--replay flags")
+        if int(state["capacity"]) != self.capacity:
+            raise ValueError(
+                f"checkpoint replay capacity {state['capacity']} != "
+                f"{self.capacity} — resume with the same --replay-capacity")
+        arrays = state["arrays"]
+        self._arrays = None if arrays is None else \
+            {k: np.asarray(v) for k, v in arrays.items()}
+        feat = state["feat"]
+        self._feat = None if feat is None else np.asarray(feat, np.float32)
+        self._free = [int(i) for i in np.asarray(state["free"])]
+        self._live = np.asarray(state["live"], bool)
+        self._prio = np.asarray(state["prio"], np.float64)
+        self._seq = np.asarray(state["seq"], np.int64)
+        self._next_seq = int(state["next_seq"])
+        self._slot_of_ticket = {int(t): int(s)
+                                for t, s in np.asarray(state["tickets"])}
+        self.inserted = int(state["inserted"])
+        self.evicted = int(state["evicted"])
+        self.sampled = int(state["sampled"])
+
 
 class UniformReplay(_SlotReplay):
     """FIFO eviction, uniform sampling."""
@@ -262,6 +334,199 @@ class AttentiveReplay(_SlotReplay):
         order = live[np.argsort(d, kind="stable")]
         reps = -(-k // len(order))  # ceil: wrap when k > live
         return np.tile(order, reps)[:k]
+
+
+class ShardedReplay:
+    """Per-device-partitioned replay over a data mesh.
+
+    One inner strategy buffer per mesh device, each holding only that
+    device's slice of every inserted batch (capacity is GLOBAL and splits
+    evenly). ``insert`` reads per-device shard views of the incoming
+    globally-sharded rollout (no global gather); ``sample`` draws k/N
+    columns from every partition and re-assembles the global ``(T, k,
+    ...)`` batch with ``jax.make_array_from_single_device_arrays`` — a
+    metadata-only fan-in, so each device receives exactly its own sampled
+    columns and the learner consumes the batch where it lives.
+
+    ``mix`` builds the mixed fresh+replayed batch DEVICE-WISE: device d's
+    block is ``concat(fresh_d, replayed_d)`` computed on d (a tiny jitted
+    concat), then fanned into the global array. The emitted column layout
+    is therefore per-device interleaved — ``[fresh_0 | replay_0 | fresh_1 |
+    replay_1 | ...]`` — not globally fresh-first; ``is_replay`` and
+    ``emitted_ids`` describe exactly that layout, so the learner's
+    per-column priority vector routes back to the right slots.
+
+    Slot ids are ``(device_index, ticket)`` pairs; everything else follows
+    the ``ReplayBuffer`` contract.
+    """
+
+    def __init__(self, kind: str, capacity: int, mesh, **kwargs):
+        from repro.distributed.sharding import rollout_batch_shardings
+        self._mesh = mesh
+        self._devices = list(mesh.devices.reshape(-1))
+        n = len(self._devices)
+        if capacity % n != 0:
+            raise ValueError(f"replay capacity {capacity} not divisible by "
+                             f"mesh size {n}")
+        self._parts = [make_buffer(kind, capacity // n, **kwargs)
+                       for _ in range(n)]
+        self.kind = kind
+        self.capacity = capacity
+        self.needs_query = bool(getattr(self._parts[0], "needs_query",
+                                        False))
+        self._shardings = rollout_batch_shardings(mesh)
+        self._cat = jax.jit(lambda f, r: jnp.concatenate((f, r), axis=1))
+
+    # -- per-device plumbing ---------------------------------------------------
+
+    def _per_device(self, x, b_local):
+        """``x`` as one array per mesh device: zero-copy shard views when
+        ``x`` is already laid out over the mesh, host column slices
+        otherwise (insert-time fallback for host-resident batches)."""
+        if isinstance(x, jax.Array):
+            by_dev = {s.device: s.data for s in x.addressable_shards}
+            if (all(d in by_dev for d in self._devices)
+                    and all(by_dev[d].ndim >= 2
+                            and by_dev[d].shape[1] == b_local
+                            for d in self._devices)):
+                return [by_dev[d] for d in self._devices]
+        h = np.asarray(x)
+        return [h[:, d * b_local:(d + 1) * b_local]
+                for d in range(len(self._devices))]
+
+    def _assemble(self, per_dev: List[Rollout]) -> Rollout:
+        n = len(self._devices)
+        out = {}
+        for key in per_dev[0]:
+            shards = [jax.device_put(per_dev[d][key], self._devices[d])
+                      for d in range(n)]
+            x = shards[0]
+            shape = (x.shape[0], x.shape[1] * n) + x.shape[2:]
+            out[key] = jax.make_array_from_single_device_arrays(
+                shape, self._shardings[x.ndim], shards)
+        return out
+
+    # -- ReplayBuffer contract -------------------------------------------------
+
+    def insert(self, rollout: Rollout,
+               priorities: Optional[np.ndarray] = None) -> List[Tuple]:
+        n = len(self._devices)
+        b = rollout["action"].shape[1]
+        if b % n != 0:
+            raise ValueError(f"batch {b} not divisible by mesh size {n}")
+        bl = b // n
+        cols = {k: self._per_device(v, bl) for k, v in rollout.items()}
+        ids: List[Tuple] = []
+        for d in range(n):
+            local = {k: np.asarray(v[d]) for k, v in cols.items()}
+            pr = None if priorities is None \
+                else np.asarray(priorities)[d * bl:(d + 1) * bl]
+            ids += [(d, t) for t in self._parts[d].insert(local,
+                                                          priorities=pr)]
+        return ids
+
+    def sample(self, k: int, rng: np.random.Generator, *,
+               query: Optional[Any] = None) -> Tuple[Rollout, List[Tuple]]:
+        n = len(self._devices)
+        if k % n != 0:
+            raise ValueError(
+                f"sample size {k} not divisible by mesh size {n} — pick a "
+                "--replay-ratio whose replayed column count divides the "
+                "mesh")
+        kl = k // n
+        q = None if query is None else np.asarray(query)
+        per_dev, ids = [], []
+        for d in range(n):
+            q_d = None
+            if q is not None:
+                bq = q.shape[1] // n
+                q_d = q[:, d * bq:(d + 1) * bq]
+            local, part_ids = self._parts[d].sample(kl, rng, query=q_d)
+            per_dev.append(local)
+            ids += [(d, t) for t in part_ids]
+        return self._assemble(per_dev), ids
+
+    def mix(self, fresh: Rollout, replayed: Rollout):
+        """Device-wise mixed batch: ``concat(fresh_d, replayed_d)`` on each
+        device, fanned into one globally-sharded batch + its ``is_replay``
+        mask. Schema drift is rejected upstream (``ReplaySource._mix``
+        validates fresh/replayed key sets before delegating here)."""
+        n = len(self._devices)
+        bl = fresh["action"].shape[1] // n
+        kl = replayed["action"].shape[1] // n
+        per_dev = []
+        for d in range(n):
+            per_dev.append({})
+        for key in fresh:
+            f_parts = self._per_device(fresh[key], bl)
+            r_parts = self._per_device(replayed[key], kl)
+            for d, dev in enumerate(self._devices):
+                f_d = f_parts[d] if isinstance(f_parts[d], jax.Array) \
+                    else jax.device_put(f_parts[d], dev)
+                r_d = r_parts[d] if isinstance(r_parts[d], jax.Array) \
+                    else jax.device_put(r_parts[d], dev)
+                per_dev[d][key] = self._cat(f_d, r_d)
+        batch = self._assemble(per_dev)
+        mask = np.tile(np.concatenate([np.zeros(bl, bool),
+                                       np.ones(kl, bool)]), n)
+        batch["is_replay"] = jnp.asarray(mask)
+        return batch
+
+    def emitted_ids(self, fresh_ids: List, replay_ids: List) -> List:
+        """Slot ids in the emitted (per-device interleaved) column order —
+        the alignment contract for the learner's priority vector."""
+        n = len(self._devices)
+        bl, kl = len(fresh_ids) // n, len(replay_ids) // n
+        out: List = []
+        for d in range(n):
+            out += list(fresh_ids[d * bl:(d + 1) * bl])
+            out += list(replay_ids[d * kl:(d + 1) * kl])
+        return out
+
+    def update_priorities(self, slot_ids, priorities) -> None:
+        priorities = np.asarray(priorities, np.float64)
+        per_part: Dict[int, Tuple[List[int], List[float]]] = {}
+        for (d, t), p in zip(slot_ids, priorities):
+            ids, prs = per_part.setdefault(int(d), ([], []))
+            ids.append(int(t))
+            prs.append(float(p))
+        for d, (ids, prs) in per_part.items():
+            self._parts[d].update_priorities(ids, np.asarray(prs))
+
+    def __len__(self) -> int:
+        return sum(len(p) for p in self._parts)
+
+    def stats(self) -> Dict[str, float]:
+        n = len(self)
+        live_prio = [p._prio[p._live] for p in self._parts if len(p)]
+        return {
+            "occupancy": n / self.capacity,
+            "mean_priority": float(np.concatenate(live_prio).mean())
+            if live_prio else 0.0,
+            "inserted": float(sum(p.inserted for p in self._parts)),
+            "evicted": float(sum(p.evicted for p in self._parts)),
+            "sampled": float(sum(p.sampled for p in self._parts)),
+        }
+
+    def clear(self) -> None:
+        for p in self._parts:
+            p.clear()
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"kind": "ShardedReplay", "n": len(self._parts),
+                "parts": [p.state_dict() for p in self._parts]}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        if state.get("kind") != "ShardedReplay":
+            raise ValueError(
+                f"checkpoint replay buffer is {state.get('kind')!r}, this "
+                "run built ShardedReplay — resume with the same flags")
+        if int(state["n"]) != len(self._parts):
+            raise ValueError(
+                f"checkpoint replay has {state['n']} partitions, this mesh "
+                f"has {len(self._parts)} — resume with the same --mesh-data")
+        for p, st in zip(self._parts, state["parts"]):
+            p.load_state_dict(st)
 
 
 _KINDS = {"uniform": UniformReplay, "elite": EliteReplay,

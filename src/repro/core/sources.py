@@ -29,10 +29,25 @@ exactly the learner-input layout of the paper's §2, so the `Runtime`
                         above: inserts fresh rollouts into a ReplayBuffer
                         (core/replay.py) and emits mixed fresh+replayed
                         batches tagged with an ``is_replay`` column mask.
+
+SourceState: every source is a stateful, checkpointable object.
+``state_dict()`` captures everything the rollout stream depends on — env
+carries, RNG key streams, dispatch bookkeeping (the double-buffered
+in-flight rollout and held behavior params), replay-buffer slots and
+priorities — as a plain pytree of dicts/lists/tuples/scalars/arrays;
+``load_state_dict()`` restores it into a freshly-constructed source of the
+same shape. The Runtime saves it inside every checkpoint
+(checkpoint.save ``structured=``) and ``train.py --resume`` restores it, so
+a killed-and-resumed run replays the exact batch stream of an
+uninterrupted one (bit-identical final params). The one exception is the
+host-loop path: Python thread scheduling is not replayable, so
+``HostLoopSource`` restarts its actors fresh and only the learner + replay
+state resumes exactly.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Dict, Iterator, Optional, Protocol, \
     runtime_checkable
 
@@ -50,6 +65,12 @@ class RolloutSource(Protocol):
     lagged parameters (that is the point of the decoupled architecture);
     the rollout's behavior outputs must describe the policy that actually
     produced it.
+
+    ``state_dict()``/``load_state_dict()`` are the SourceState
+    checkpoint/restore protocol (module docstring): sources with no
+    resumable state return ``{"kind": ...}`` and ignore loads, but every
+    source must answer, so composition (ReplaySource over anything) nests
+    checkpoints without special-casing.
     """
 
     frames_per_batch: int
@@ -59,6 +80,22 @@ class RolloutSource(Protocol):
     def next_batch(self, params) -> Dict[str, Any]: ...
 
     def stop(self) -> None: ...
+
+    def state_dict(self) -> Dict[str, Any]: ...
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None: ...
+
+
+def _check_kind(state: Dict[str, Any], obj) -> None:
+    """Loud resume-composition guard: a checkpoint written by one source
+    shape must not be loaded into another (e.g. --replay elite saved,
+    resumed without --replay)."""
+    kind = state.get("kind") if hasattr(state, "get") else None
+    if kind != type(obj).__name__:
+        raise ValueError(
+            f"checkpoint source state is {kind!r} but this run built "
+            f"{type(obj).__name__} — resume with the same source flags "
+            "(--actors/--mesh-data/--replay)")
 
 
 def check_rollout(rollout: Dict[str, Any], unroll_length: int,
@@ -148,6 +185,60 @@ class _CompiledUnrollSource:
         self._behavior_params = None
         self._dispatches = 0
 
+    # -- SourceState protocol -------------------------------------------------
+    #
+    # Captured at a step boundary (periodic/final checkpoints are), this is
+    # the COMPLETE dispatch state: carry + key stream (subclass hook), the
+    # dispatch counter (param_sync_every cadence), the in-flight
+    # double-buffered rollout, and the held behavior params (which may lag
+    # the learner params the resume restores). Restoring all of it makes
+    # the resumed rollout stream bit-identical to the uninterrupted one.
+
+    def _stream_state(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def _load_stream_state(self, state: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def _load_rollout(self, rollout):
+        raise NotImplementedError
+
+    def _load_behavior(self, behavior_params):
+        raise NotImplementedError
+
+    def state_dict(self) -> Dict[str, Any]:
+        host = lambda tree: jax.tree.map(np.asarray, tree)  # noqa: E731
+        return {
+            "kind": type(self).__name__,
+            "dispatches": self._dispatches,
+            "pending": None if self._pending is None
+            else host(self._pending),
+            "behavior_params": None if self._behavior_params is None
+            else host(self._behavior_params),
+            "stream": self._stream_state(),
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        _check_kind(state, self)
+        self._dispatches = int(state["dispatches"])
+        self._load_stream_state(state["stream"])
+        pending = state["pending"]
+        self._pending = None if pending is None \
+            else self._load_rollout(pending)
+        behavior = state["behavior_params"]
+        self._behavior_params = None if behavior is None \
+            else self._load_behavior(behavior)
+
+
+def _unflatten_like(template, tree):
+    """Rebuild ``tree`` (whose container types degraded to dict/list/tuple
+    in the checkpoint) into the pytree STRUCTURE of ``template`` — the
+    restore path for env carries that use NamedTuple states."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template),
+        [jnp.asarray(x) for x in leaves])
+
 
 class DeviceSource(_CompiledUnrollSource):
     """Single-device compiled-unroll source (see _CompiledUnrollSource for
@@ -188,6 +279,20 @@ class DeviceSource(_CompiledUnrollSource):
                                             self._carry, k)
         return rollout
 
+    def _stream_state(self):
+        return {"carry": jax.tree.map(np.asarray, self._carry),
+                "key": np.asarray(self._key)}
+
+    def _load_stream_state(self, state):
+        self._carry = _unflatten_like(self._carry, state["carry"])
+        self._key = jnp.asarray(state["key"])
+
+    def _load_rollout(self, rollout):
+        return jax.tree.map(jnp.asarray, rollout)
+
+    def _load_behavior(self, behavior_params):
+        return jax.tree.map(jnp.asarray, behavior_params)
+
 
 # ---------------------------------------------------------------------------
 # Data-parallel sharded actors (one stream per mesh data-axis device)
@@ -217,7 +322,7 @@ class ShardedDeviceSource(_CompiledUnrollSource):
                  unroll_length: int, batch_size: int,
                  pipelined: bool = True, param_sync_every: int = 1,
                  donate: Optional[bool] = None):
-        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.distributed.sharding import rollout_batch_shardings
         self._mesh = mesh
         self._devices = list(mesh.devices.reshape(-1))
         if len(carries) != len(self._devices):
@@ -233,12 +338,7 @@ class ShardedDeviceSource(_CompiledUnrollSource):
         self.frames_per_batch = unroll_length * batch_size
         self._init_dispatch(pipelined=pipelined,
                             param_sync_every=param_sync_every)
-        daxes = tuple(mesh.axis_names)
-        self._shardings = {
-            nd: NamedSharding(mesh, PartitionSpec(
-                *([None, daxes if len(daxes) > 1 else daxes[0]]
-                  + [None] * (nd - 2))))
-            for nd in (2, 3, 4, 5, 6)}
+        self._shardings = rollout_batch_shardings(mesh)
 
     @classmethod
     def for_env(cls, env, apply_fn, *, unroll_length: int, batch_size: int,
@@ -306,6 +406,52 @@ class ShardedDeviceSource(_CompiledUnrollSource):
 
         return jax.tree.map(one, *shards)
 
+    # -- SourceState hooks (per-device stream fan-out) -------------------------
+
+    def _stream_state(self):
+        return {"n": len(self._devices),
+                "carries": [jax.tree.map(np.asarray, c)
+                            for c in self._carries],
+                "keys": [np.asarray(k) for k in self._keys]}
+
+    def _load_stream_state(self, state):
+        n = len(self._devices)
+        if int(state["n"]) != n:
+            raise ValueError(
+                f"checkpoint source state spans {state['n']} devices, this "
+                f"mesh has {n} — resume with the same --mesh-data")
+        self._carries = [
+            jax.device_put(_unflatten_like(self._carries[d], c), dev)
+            for d, (c, dev) in enumerate(zip(state["carries"],
+                                             self._devices))]
+        self._keys = [jax.device_put(jnp.asarray(k), dev)
+                      for k, dev in zip(state["keys"], self._devices)]
+
+    def _load_rollout(self, rollout):
+        """Re-shard a host rollout saved from the globally-sharded pending
+        batch: slice each leaf's columns back to its owning device and
+        re-assemble (metadata-only) — the restored pending batch lives
+        exactly where the original did."""
+        n = len(self._devices)
+
+        def split(x):
+            x = np.asarray(x)
+            bl = x.shape[1] // n
+            return [x[:, d * bl:(d + 1) * bl] for d in range(n)]
+
+        cols = jax.tree.map(split, rollout)
+        shards = [jax.tree.map(lambda lst: lst[d], cols,
+                               is_leaf=lambda v: isinstance(v, list))
+                  for d in range(n)]
+        return self._assemble([
+            jax.tree.map(lambda x, dev=dev: jax.device_put(x, dev), s)
+            for s, dev in zip(shards, self._devices)])
+
+    def _load_behavior(self, behavior_params):
+        return [jax.tree.map(lambda x, dev=dev: jax.device_put(
+            jnp.asarray(x), dev), p)
+            for p, dev in zip(behavior_params, self._devices)]
+
 
 # ---------------------------------------------------------------------------
 # Off-policy replay composition
@@ -353,9 +499,34 @@ class ReplaySource:
         self._last_ids: list = []
         self._served = 0        # replayed columns emitted
         self._hits = 0          # ... that were NOT inserted this very step
+        self._prio_drops = 0    # priority vectors discarded (shape drift)
+        self._prio_warned = False
 
     def start(self, params) -> None:
         self.inner.start(params)
+
+    def _mix(self, fresh, replayed, b: int, k: int):
+        """Mixed batch assembly. Sharded buffers (ShardedReplay) own the
+        layout (per-device interleaved, no host concat); the default is a
+        fresh-first concatenation. Either way the fresh/replayed schemas
+        must agree — a key present on one side only would silently vanish
+        from the emitted batch (and the learner would train without it),
+        so schema drift fails loudly instead."""
+        missing = sorted(set(fresh) - set(replayed))
+        extra = sorted(set(replayed) - set(fresh))
+        if missing or extra:
+            raise KeyError(
+                f"fresh/replayed batch schemas diverge: fresh-only keys "
+                f"{missing}, replay-only keys {extra} — the emitted batch "
+                "would silently drop columns")
+        mix = getattr(self.buffer, "mix", None)
+        if mix is not None:
+            return mix(fresh, replayed)
+        batch = {key: jnp.concatenate(
+            [jnp.asarray(fresh[key]), jnp.asarray(replayed[key])], axis=1)
+            for key in fresh}
+        batch["is_replay"] = jnp.zeros((b + k,), bool).at[b:].set(True)
+        return batch
 
     def next_batch(self, params):
         fresh = self.inner.next_batch(params)
@@ -379,11 +550,12 @@ class ReplaySource:
         if replayed is None:         # first batch: warm-start from itself
             replayed, replay_ids = self.buffer.sample(k, self._rng,
                                                       query=query)
-        batch = {key: jnp.concatenate(
-            [jnp.asarray(fresh[key]), jnp.asarray(replayed[key])], axis=1)
-            for key in replayed}
-        batch["is_replay"] = jnp.zeros((b + k,), bool).at[b:].set(True)
-        self._last_ids = list(fresh_ids) + list(replay_ids)
+        batch = self._mix(fresh, replayed, b, k)
+        # _last_ids must follow the EMITTED column order (the learner's
+        # priority vector aligns with it); sharded buffers interleave.
+        order = getattr(self.buffer, "emitted_ids", None)
+        self._last_ids = order(list(fresh_ids), list(replay_ids)) \
+            if order is not None else list(fresh_ids) + list(replay_ids)
         self._served += k
         fresh_set = set(fresh_ids)
         self._hits += sum(1 for i in replay_ids if i not in fresh_set)
@@ -391,19 +563,65 @@ class ReplaySource:
 
     def on_learner_metrics(self, step, metrics) -> None:
         """Runtime feedback hook: route the learner's per-column priority
-        vector to the slots that produced the last batch."""
+        vector to the slots that produced the last batch. A vector that
+        does not align with the emitted columns cannot be routed — that
+        silently degrades elite replay to uniform, so it warns (once) and
+        counts the drop in ``stats()``."""
         del step
         prio = metrics.get("priority") if hasattr(metrics, "get") else None
         if prio is None or not self._last_ids:
             return
         prio = np.asarray(prio, np.float64)
-        if prio.shape[0] == len(self._last_ids):
-            self.buffer.update_priorities(self._last_ids, prio)
+        if prio.shape[0] != len(self._last_ids):
+            self._prio_drops += 1
+            if not self._prio_warned:
+                self._prio_warned = True
+                warnings.warn(
+                    f"replay priority vector has {prio.shape[0]} entries "
+                    f"but the last batch emitted {len(self._last_ids)} "
+                    "columns; feedback dropped — elite replay is degrading "
+                    "to uniform (drops counted in stats()['replay_"
+                    "priority_drops'])", RuntimeWarning, stacklevel=2)
+            return
+        self.buffer.update_priorities(self._last_ids, prio)
 
     def stats(self):
         s = {f"replay_{k}": v for k, v in self.buffer.stats().items()}
         s["replay_hit_rate"] = self._hits / max(self._served, 1)
+        s["replay_priority_drops"] = float(self._prio_drops)
         return s
+
+    # -- SourceState protocol --------------------------------------------------
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Nested checkpoint: inner-source state + buffer slots/priorities
+        + the sampling RNG and feedback bookkeeping. ``_last_ids`` entries
+        may be ints or (device, ticket) tuples (ShardedReplay) — both
+        round-trip through the structured checkpoint encoder."""
+        return {
+            "kind": type(self).__name__,
+            "inner": self.inner.state_dict(),
+            "buffer": self.buffer.state_dict(),
+            "rng": self._rng.bit_generator.state,
+            "last_ids": list(self._last_ids),
+            "served": self._served,
+            "hits": self._hits,
+            "prio_drops": self._prio_drops,
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        _check_kind(state, self)
+        self.inner.load_state_dict(state["inner"])
+        self.buffer.load_state_dict(state["buffer"])
+        rng = np.random.default_rng()
+        rng.bit_generator.state = state["rng"]
+        self._rng = rng
+        self._last_ids = [tuple(int(j) for j in i)
+                          if isinstance(i, (tuple, list)) else int(i)
+                          for i in state["last_ids"]]
+        self._served = int(state["served"])
+        self._hits = int(state["hits"])
+        self._prio_drops = int(state["prio_drops"])
 
     def stop(self) -> None:
         """Stop the inner source and recycle every buffer slot back to the
@@ -426,13 +644,25 @@ class HostLoopSource:
     (actors pick them up on their next policy evaluation — the natural
     asynchronous parameter lag of the host architecture) and blocks until
     the learner queue yields a stacked batch.
+
+    ``mesh``: when set, every learner-queue batch is split across the data
+    mesh on its batch dimension (``jax.device_put`` with the shared rollout
+    sharding table) before it is handed to the learner — the host actor
+    architecture feeding the data-parallel sharded learner. The transfer
+    replaces the single-device host→device copy the unsharded path already
+    paid; there is no extra resharding step.
+
+    SourceState: Python thread scheduling (which actor's rollout lands in
+    which batch slot) is not replayable, so the host path cannot promise
+    bit-exact resume. ``state_dict`` records only the source kind; actors
+    restart fresh on resume while learner + replay state restore exactly.
     """
 
     def __init__(self, env, apply_fn, *, num_actors: int,
                  unroll_length: int, batch_size: int, seed: int = 0,
                  inference_batch: Optional[int] = None,
                  inference_timeout_ms: float = 5.0, max_items: int = 128,
-                 batch_timeout_s: float = 60.0):
+                 batch_timeout_s: float = 60.0, mesh=None):
         self._env = env
         self._apply_fn = apply_fn
         self.num_actors = num_actors
@@ -446,6 +676,16 @@ class HostLoopSource:
         self._batch_timeout_s = batch_timeout_s
         self._params = None
         self._pool = None
+        self._inference_thread = None
+        self._mesh = mesh
+        self._shardings = None
+        if mesh is not None:
+            from repro.distributed.sharding import rollout_batch_shardings
+            n = mesh.devices.size
+            if batch_size % n != 0:
+                raise ValueError(f"batch {batch_size} not divisible by "
+                                 f"mesh size {n}")
+            self._shardings = rollout_batch_shardings(mesh)
 
     def start(self, params) -> None:
         from repro.core.actor_pool import ActorPool, start_inference_thread
@@ -464,7 +704,7 @@ class HostLoopSource:
             lambda seed: HostEnv(self._env, seed), self.num_actors,
             self.unroll_length, self.inference, self.learner_queue,
             seed=self.seed)
-        start_inference_thread(
+        self._inference_thread = start_inference_thread(
             self.inference,
             lambda obs: np.asarray(policy(self._params, jnp.asarray(obs))))
         self._pool.start()
@@ -479,12 +719,37 @@ class HostLoopSource:
                 f"no learner batch within {self._batch_timeout_s}s "
                 f"({self.num_actors} actors, queue "
                 f"size {self.learner_queue.size()})")
-        return {k: jnp.asarray(v) for k, v in batch.items()}
+        if self._shardings is None:
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        # split the stacked host batch over the data mesh (batch dim 1)
+        return {k: jax.device_put(np.asarray(v),
+                                  self._shardings[np.ndim(v)])
+                for k, v in batch.items()}
 
     def stop(self) -> None:
-        if self._pool is not None:
-            self._pool.stop()
-            self._pool = None
+        """Stop the actor pool AND the inference thread. The pool closes
+        the DynamicBatcher (unblocking the thread's ``get_batch``), but the
+        thread itself must be joined — otherwise it lingers, evaluating the
+        policy with the stale ``self._params`` of the stopped run."""
+        pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.stop()
+        thread, self._inference_thread = self._inference_thread, None
+        if thread is not None:
+            thread.join(timeout=5.0)
+            if thread.is_alive():
+                # warn, don't raise: stop() runs in Runtime's finally, and
+                # raising here would mask the root-cause exception (e.g.
+                # the actor TimeoutError a wedged policy eval produced).
+                warnings.warn("inference thread did not exit within 5s of "
+                              "stop()", RuntimeWarning, stacklevel=2)
+        self._params = None
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"kind": type(self).__name__}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        _check_kind(state, self)
 
 
 # ---------------------------------------------------------------------------
@@ -543,6 +808,13 @@ class GeneratorSource:
     def stop(self) -> None:
         pass
 
+    def state_dict(self) -> Dict[str, Any]:
+        return {"kind": type(self).__name__, "key": np.asarray(self._key)}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        _check_kind(state, self)
+        self._key = jnp.asarray(state["key"])
+
 
 def lm_rl_step_from_rollout(lm_train_step: Callable) -> Callable:
     """Adapt ``learner.make_lm_train_step`` (batch-major token dict) to the
@@ -589,3 +861,11 @@ class DataSource:
     def stop(self) -> None:
         if self._close is not None:
             self._close()
+
+    def state_dict(self) -> Dict[str, Any]:
+        # Iterator position is owned by the iterator (re-seed/skip it when
+        # resuming a data pipeline); the source itself carries no state.
+        return {"kind": type(self).__name__}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        _check_kind(state, self)

@@ -276,6 +276,24 @@ def batch_axes_spec(mesh: Mesh, rules: Dict, ndim: int, shape,
     return P(*parts)
 
 
+def rollout_batch_shardings(mesh: Mesh, *, batch_dim: int = 1,
+                            ndims: Sequence[int] = (2, 3, 4, 5, 6)):
+    """ndim -> NamedSharding placing ``batch_dim`` over ALL mesh axes
+    (replicated elsewhere) — the layout of a canonical time-major rollout
+    batch fanned over a data mesh. One table shared by every producer of
+    globally-sharded rollouts (ShardedDeviceSource per-device assembly,
+    ShardedReplay sampled-column re-assembly, HostLoopSource learner-queue
+    splitting), so their outputs compose without resharding."""
+    axes = tuple(mesh.axis_names)
+    ax = axes if len(axes) > 1 else axes[0]
+    out = {}
+    for nd in ndims:
+        parts = [None] * nd
+        parts[batch_dim] = ax
+        out[nd] = NamedSharding(mesh, P(*parts))
+    return out
+
+
 def shard_rollout(batch, mesh: Mesh, rules: Dict):
     """Constrain every leaf of a canonical rollout batch to be sharded over
     the data axes on its batch dimension (replicated everywhere else).

@@ -60,12 +60,11 @@ def build_rl_agent(args):
     params, _ = init_agent(init_fn, jax.random.PRNGKey(train_cfg.seed))
     opt = make_optimizer(train_cfg)
 
+    # The source composition matrix: (device | sharded | host) actors,
+    # optionally wrapped in replay — every combination with --mesh-data
+    # composes (per-device-sliced replay, mesh-split host learner queue).
     mesh = None
     if args.mesh_data:
-        if args.actors == "host" or args.replay != "off":
-            raise SystemExit("--mesh-data composes with the default "
-                             "on-device actors only (no --actors host / "
-                             "--replay)")
         from repro.launch.mesh import make_data_mesh
         mesh = make_data_mesh(args.mesh_data)
 
@@ -73,7 +72,8 @@ def build_rl_agent(args):
         source = sources_lib.HostLoopSource(
             env, apply_fn, num_actors=train_cfg.num_actors,
             unroll_length=train_cfg.unroll_length,
-            batch_size=train_cfg.batch_size, seed=train_cfg.seed)
+            batch_size=train_cfg.batch_size, seed=train_cfg.seed,
+            mesh=mesh)
     elif mesh is not None:
         source = sources_lib.ShardedDeviceSource.for_env(
             env, apply_fn, unroll_length=train_cfg.unroll_length,
@@ -88,8 +88,14 @@ def build_rl_agent(args):
             pipelined=not args.sync)
     if args.replay != "off":
         from repro.core import replay as replay_lib
+        if mesh is not None:
+            buffer = replay_lib.ShardedReplay(args.replay,
+                                              args.replay_capacity, mesh)
+        else:
+            buffer = replay_lib.make_buffer(args.replay,
+                                            args.replay_capacity)
         source = sources_lib.ReplaySource(
-            source, replay_lib.make_buffer(args.replay, args.replay_capacity),
+            source, buffer,
             replay_ratio=args.replay_ratio, seed=train_cfg.seed,
             value_fn=jax.jit(lambda p, obs: apply_fn(p, obs).baseline))
     step_fn = jax.jit(learner_lib.make_train_step(
@@ -181,9 +187,15 @@ def main(argv=None):
                         "reference or the Pallas TPU kernel "
                         "(interpret-mode on CPU); ignored by --mode lm")
     p.add_argument("--resume", action="store_true",
-                   help="restore {params, opt_state, step} from the latest "
-                        "checkpoint in --checkpoint-dir and continue from "
-                        "the saved step (LR schedule intact)")
+                   help="restore {params, opt_state, step} AND the rollout "
+                        "source state (env carries, RNG streams, replay "
+                        "contents) from the latest checkpoint in "
+                        "--checkpoint-dir and continue from the saved step "
+                        "— bit-identical to an uninterrupted run for the "
+                        "on-device actor paths")
+    p.add_argument("--checkpoint-every", type=int, default=0, metavar="N",
+                   help="also checkpoint every N steps (0: final/crash "
+                        "checkpoints only) — the kill/--resume safety net")
     p.add_argument("--replay", default="off",
                    choices=["off", "uniform", "elite", "attentive"],
                    help="rl-agent only: mix replayed rollouts into every "
@@ -220,10 +232,19 @@ def main(argv=None):
             params = place(restored["params"])
             opt_state = place(restored["opt_state"])
             start_step = int(meta.get("step", 0))
-            print(f"resumed {path} at step {start_step}")
+            # SourceState: replay the exact rollout stream (env carries,
+            # RNG, replay slots). Checkpoints from before the protocol
+            # restore learner state only (source starts fresh).
+            source_state = ckpt_lib.restore_structured(path, "source")
+            if source_state is not None:
+                source.load_state_dict(source_state)
+            print(f"resumed {path} at step {start_step}"
+                  + (" (source state restored)"
+                     if source_state is not None else ""))
     runtime = Runtime(source, step_fn, params, opt_state,
                       total_steps=args.steps, start_step=start_step,
-                      checkpoint_dir=args.checkpoint_dir, **extras)
+                      checkpoint_dir=args.checkpoint_dir,
+                      checkpoint_every=args.checkpoint_every, **extras)
     runtime.run()
     return runtime.params
 

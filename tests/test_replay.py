@@ -356,3 +356,126 @@ def test_buffer_protocol():
         assert isinstance(make_buffer(kind, 4), ReplayBuffer)
     with pytest.raises(ValueError):
         make_buffer("nope", 4)
+
+
+# -- mixed-batch schema drift (satellite: silent key drop) --------------------
+
+
+class _SchemaShiftSource:
+    """Emits the canonical keys, then grows an extra key on later batches
+    — the fresh-only-key case the mixed batch used to silently drop."""
+
+    frames_per_batch = T * B
+
+    def __init__(self):
+        self.calls = 0
+
+    def start(self, params):
+        pass
+
+    def next_batch(self, params):
+        r = make_rollout([0.0, 1.0, 2.0])
+        if self.calls:
+            r["aux"] = np.zeros((T, 3), np.float32)
+        self.calls += 1
+        return r
+
+    def stop(self):
+        pass
+
+
+def test_mixed_batch_fails_loudly_on_fresh_only_keys():
+    """A key present in the fresh rollout but absent from the sampled
+    replay columns must not silently vanish from the emitted batch."""
+    rs = ReplaySource(_SchemaShiftSource(), make_buffer("uniform", 8),
+                      replay_ratio=1.0)
+    rs.start(None)
+    rs.next_batch(None)                     # schema fixed without "aux"
+    with pytest.raises(KeyError, match="fresh-only keys \\['aux'\\]"):
+        rs.next_batch(None)
+
+
+# -- priority feedback shape drift (satellite: silent discard) ----------------
+
+
+def test_priority_shape_mismatch_warns_once_and_counts():
+    """A misaligned priority vector cannot be routed; it must warn (once)
+    and count the drop in stats() instead of silently degrading elite
+    replay to uniform."""
+    import warnings as warnings_mod
+    env, apply_fn, params = _agent()
+    src = DeviceSource.for_env(env, apply_fn, unroll_length=T, batch_size=B,
+                               key=jax.random.PRNGKey(8), pipelined=False)
+    rs = ReplaySource(src, make_buffer("elite", 16), replay_ratio=1.0)
+    rs.start(params)
+    try:
+        rs.next_batch(params)
+        good = np.ones(2 * B)
+        with warnings_mod.catch_warnings(record=True) as caught:
+            warnings_mod.simplefilter("always")
+            rs.on_learner_metrics(0, {"priority": np.ones(3)})
+            rs.on_learner_metrics(1, {"priority": np.ones(2 * B + 1)})
+            rs.on_learner_metrics(2, {"priority": good})
+        assert len(caught) == 1                       # warn once, not spam
+        assert "degrading to uniform" in str(caught[0].message)
+        assert rs.stats()["replay_priority_drops"] == 2.0
+    finally:
+        rs.stop()
+
+
+# -- sharded replay (per-device-sliced composition) ---------------------------
+
+
+def test_sharded_replay_mesh1_bit_identical_to_uniform():
+    """At mesh size 1 the per-device-sliced buffer must reproduce the
+    unsharded composition exactly: same emitted batches, same slot
+    tickets, same priority routing."""
+    from repro.core.replay import ShardedReplay
+    from repro.launch.mesh import make_data_mesh
+    env, apply_fn, params = _agent()
+    mesh = make_data_mesh(1)
+
+    def make(buffer):
+        src = DeviceSource.for_env(env, apply_fn, unroll_length=T,
+                                   batch_size=B,
+                                   key=jax.random.PRNGKey(9),
+                                   pipelined=False)
+        return ReplaySource(src, buffer, replay_ratio=1.0, seed=4)
+
+    plain = make(make_buffer("uniform", 12))
+    sharded = make(ShardedReplay("uniform", 12, mesh))
+    plain.start(params)
+    sharded.start(params)
+    try:
+        for i in range(4):
+            a, b = plain.next_batch(params), sharded.next_batch(params)
+            assert sorted(a) == sorted(b)
+            for key in a:
+                np.testing.assert_array_equal(np.asarray(a[key]),
+                                              np.asarray(b[key]),
+                                              err_msg=key)
+            assert [t for (_, t) in sharded._last_ids] == plain._last_ids
+            prio = np.arange(2 * B, dtype=np.float64) + i
+            plain.on_learner_metrics(i, {"priority": prio})
+            sharded.on_learner_metrics(i, {"priority": prio})
+            np.testing.assert_array_equal(
+                sharded.buffer._parts[0]._prio, plain.buffer._prio)
+    finally:
+        plain.stop()
+        sharded.stop()
+
+
+def test_sharded_replay_stats_aggregate_partitions():
+    from repro.core.replay import ShardedReplay
+    from repro.launch.mesh import make_data_mesh
+    buf = ShardedReplay("uniform", 8, make_data_mesh(1))
+    assert buf.capacity == 8 and len(buf) == 0
+    ids = buf.insert(make_rollout([1.0, 2.0, 3.0]))
+    assert all(isinstance(i, tuple) and i[0] == 0 for i in ids)
+    _, sampled_ids = buf.sample(2, np.random.default_rng(0))
+    buf.update_priorities(sampled_ids, np.array([5.0, 6.0]))
+    s = buf.stats()
+    assert s["occupancy"] == 3 / 8 and s["inserted"] == 3.0
+    assert s["sampled"] == 2.0
+    buf.clear()
+    assert len(buf) == 0

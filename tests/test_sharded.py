@@ -265,6 +265,54 @@ assert len(rollout["obs"].sharding.device_set) == 4
 assert all(len(s.data.devices()) == 1
            for s in rollout["obs"].addressable_shards)
 src.stop()
+
+# sharded replay composes over the sharded source: per-device-sliced
+# storage, mixed batch stays globally sharded (one shard per device, so
+# no host concat / resharding entered the hot path), per-device
+# interleaved is_replay mask, priorities route through (device, ticket)
+from repro.core.sources import ReplaySource
+from repro.core.replay import ShardedReplay
+src = ShardedDeviceSource.for_env(env, apply_fn, unroll_length=T,
+                                  batch_size=4 * B,
+                                  key=jax.random.PRNGKey(2), mesh=mesh)
+rs = ReplaySource(src, ShardedReplay("elite", 32, mesh), replay_ratio=1.0)
+rs.start(params0)
+for i in range(3):
+    mixed = rs.next_batch(params0)
+    check_rollout(mixed, T, 8 * B)
+    assert len(mixed["obs"].sharding.device_set) == 4
+    assert all(len(s.data.devices()) == 1
+               for s in mixed["obs"].addressable_shards)
+    mask = np.asarray(mixed["is_replay"])
+    np.testing.assert_array_equal(
+        mask, np.tile([False] * B + [True] * B, 4))
+    rs.on_learner_metrics(i, {"priority": np.arange(8 * B,
+                                                    dtype=np.float64)})
+parts = rs.buffer._parts
+assert all(len(p) > 0 for p in parts)
+assert any((p._prio[p._live] != 1.0).any() for p in parts)
+rs.stop()
+
+# divisibility is enforced loudly
+try:
+    ShardedReplay("uniform", 30, mesh)
+except ValueError as e:
+    assert "not divisible" in str(e)
+else:
+    raise AssertionError("capacity 30 over 4 devices should fail")
+
+# the host actor loop feeds the sharded learner: its stacked batch is
+# split over the mesh data axis
+from repro.core.sources import HostLoopSource
+host = HostLoopSource(env, apply_fn, num_actors=4, unroll_length=T,
+                      batch_size=4 * B, mesh=mesh)
+try:
+    host.start(params0)
+    hr = host.next_batch(params0)
+    check_rollout(hr, T, 4 * B)
+    assert len(hr["obs"].sharding.device_set) == 4
+finally:
+    host.stop()
 print("PARITY OK")
 """
 

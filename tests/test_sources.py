@@ -135,6 +135,26 @@ def test_runtime_trains_logs_and_checkpoints(tmp_path):
     assert bool(jnp.isfinite(rt.metrics["loss"]))
 
 
+def test_host_loop_stop_leaves_no_live_threads():
+    """Regression: stop() must close AND join the inference thread along
+    with the actor pool — a leaked inference thread keeps evaluating the
+    policy with the stale params of the stopped run."""
+    import threading
+    env, apply_fn, params = _agent()
+    before = set(threading.enumerate())
+    host = HostLoopSource(env, apply_fn, num_actors=2, unroll_length=T,
+                          batch_size=2)
+    host.start(params)
+    host.next_batch(params)
+    spawned = [t for t in threading.enumerate() if t not in before]
+    assert any(t.name == "inference" for t in spawned)
+    host.stop()
+    leaked = [t for t in threading.enumerate()
+              if t not in before and t.is_alive()]
+    assert leaked == [], f"stop() leaked threads: {leaked}"
+    assert host._params is None          # no stale params held after stop
+
+
 def test_data_source_wraps_iterator():
     batches = iter([{"tokens": np.zeros((2, 3), np.int32)}] * 3)
     closed = []
