@@ -31,6 +31,14 @@ def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(_key_str(k) for k in path)
+        # np.asarray gathers model-sharded jax.Arrays to host — correct on
+        # a single process; a multi-host global array has shards this
+        # process cannot read, so fail loudly instead of saving garbage.
+        if isinstance(leaf, jax.Array) and not leaf.is_fully_addressable:
+            raise ValueError(
+                f"cannot checkpoint non-fully-addressable array at {key!r} "
+                "— multi-host save needs a cross-host gather (ROADMAP "
+                "residue); checkpoint from a single-host run")
         flat[key] = np.asarray(leaf)
     return flat
 
@@ -113,12 +121,26 @@ def save(path: str, tree, metadata: dict | None = None,
         raise
 
 
-def restore(path: str, like):
-    """Restore into the structure of ``like`` (values replaced)."""
+def restore(path: str, like, shardings=None):
+    """Restore into the structure of ``like`` (values replaced).
+
+    ``shardings``: optional tree of ``jax.sharding.Sharding`` matching
+    ``like`` — each leaf is ``device_put`` onto its sharding as it is
+    read (the sharded-aware restore path: model-sharded params land
+    directly on the mesh, instead of materialising a host-replicated
+    numpy tree the caller then re-places)."""
     with np.load(path, allow_pickle=False) as data:
         paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+        if shardings is None:
+            shard_leaves = [None] * len(paths_leaves)
+        else:
+            shard_leaves = jax.tree_util.tree_leaves(shardings)
+            if len(shard_leaves) != len(paths_leaves):
+                raise ValueError(
+                    f"shardings tree has {len(shard_leaves)} leaves but "
+                    f"the template has {len(paths_leaves)}")
         leaves = []
-        for path_keys, leaf in paths_leaves:
+        for (path_keys, leaf), sharding in zip(paths_leaves, shard_leaves):
             key = "/".join(_key_str(k) for k in path_keys)
             if key not in data:
                 raise KeyError(f"checkpoint missing {key!r}")
@@ -126,7 +148,8 @@ def restore(path: str, like):
             if hasattr(leaf, "dtype") and arr.shape != leaf.shape:
                 raise ValueError(
                     f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
-            leaves.append(arr)
+            leaves.append(arr if sharding is None
+                          else jax.device_put(arr, sharding))
         meta = json.loads(str(data["__metadata__"]))
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
 

@@ -16,6 +16,7 @@ TorchBeast's multi-learner-thread hogwild updates (DESIGN.md §1).
 
 from __future__ import annotations
 
+import contextlib
 from typing import Callable
 
 import jax
@@ -37,6 +38,25 @@ def _make_shard_fns(mesh, rules):
         rules = sharding_lib.RL_AGENT_RULES
     return (lambda batch: sharding_lib.shard_rollout(batch, mesh, rules),
             lambda grads: sharding_lib.replicate(grads, mesh))
+
+
+def _make_lm_mesh_fns(mesh, rules):
+    """(trace-context factory, batch constrainer) for the LM steps under a
+    2-D ("data","model") mesh; both identity when no mesh is given (the
+    single-device path compiles to the exact same program as before).
+
+    The context activates the (mesh, rules) thread-local so the model's
+    ``constrain()`` calls shard activations over "model"; the batch
+    constrainer pins the token batch's leading B dimension to the data
+    axes (distributed/sharding.py::shard_lm_batch).
+    """
+    if mesh is None:
+        return contextlib.nullcontext, (lambda batch: batch)
+    from repro.distributed import sharding as sharding_lib
+    if rules is None:
+        rules = sharding_lib.MEGATRON_RULES
+    return (lambda: sharding_lib.use_rules(mesh, rules),
+            lambda batch: sharding_lib.shard_lm_batch(batch, mesh, rules))
 
 
 def make_train_step(agent_apply: Callable, opt, train_cfg, *,
@@ -160,14 +180,23 @@ def make_recurrent_train_step(agent_apply, opt, train_cfg, *,
 
 
 def make_lm_train_step(cfg, opt, train_cfg, loss_chunk=512,
-                       grad_constraint=None, vtrace_impl="scan"):
+                       grad_constraint=None, vtrace_impl="scan",
+                       mesh=None, rules=None):
     """IMPALA learner step for LLM policies (DESIGN.md §2).
 
     grad_constraint: optional fn(grads)->grads applied right after jax.grad
-    — the launcher passes a ZeRO-2 sharding constraint here so the gradient
-    all-reduce becomes a reduce-scatter and the fp32 optimizer temporaries
-    stay sharded over the data axes.
+    — the launcher passes a sharding constraint here (grads pinned to the
+    param shardings for the Megatron layout, or a ZeRO-2 constraint so the
+    gradient all-reduce becomes a reduce-scatter and the fp32 optimizer
+    temporaries stay sharded over the data axes).
     vtrace_impl: 'scan' or 'kernel' (the Pallas V-trace recursion).
+    mesh/rules: optional 2-D ("data","model") context
+    (distributed/sharding.py; rules default MEGATRON_RULES). The token
+    batch is constrained to shard B over the data axes and the model's
+    ``constrain()`` calls activate (params/activations over "model"); the
+    cross-data-axis gradient all-reduce falls out of sharding propagation,
+    exactly as in ``make_train_step``. At mesh (1, 1) the compiled program
+    is bit-identical to the unmeshed one (tests/test_mesh2d.py).
 
     batch (batch-major; transposed internally for V-trace):
       tokens            (B, S+1) int32   obs[0..S]; actions are tokens[1:]
@@ -176,6 +205,7 @@ def make_lm_train_step(cfg, opt, train_cfg, loss_chunk=512,
       done              (B, S) bool
       [vision]          (B, Sv, d)       VLM patch embeddings (stub)
     """
+    mesh_ctx, shard_batch = _make_lm_mesh_fns(mesh, rules)
 
     def loss_fn(params, batch):
         tokens = batch["tokens"]          # (B, S+1); model sees first S
@@ -208,11 +238,13 @@ def make_lm_train_step(cfg, opt, train_cfg, loss_chunk=512,
         return total, loss_out
 
     def train_step(params, opt_state, step, batch):
-        grads, loss_out = jax.grad(loss_fn, has_aux=True)(params, batch)
-        if grad_constraint is not None:
-            grads = grad_constraint(grads)
-        updates, opt_state = opt.update(grads, opt_state, params, step)
-        params = apply_updates(params, updates)
+        with mesh_ctx():
+            batch = shard_batch(batch)
+            grads, loss_out = jax.grad(loss_fn, has_aux=True)(params, batch)
+            if grad_constraint is not None:
+                grads = grad_constraint(grads)
+            updates, opt_state = opt.update(grads, opt_state, params, step)
+            params = apply_updates(params, updates)
         metrics = {
             "loss": loss_out.total,
             "pg_loss": loss_out.pg_loss,
@@ -225,9 +257,13 @@ def make_lm_train_step(cfg, opt, train_cfg, loss_chunk=512,
     return train_step
 
 
-def make_lm_pretrain_step(cfg, opt, loss_chunk=512):
+def make_lm_pretrain_step(cfg, opt, loss_chunk=512, grad_constraint=None,
+                          mesh=None, rules=None):
     """Plain next-token-prediction step (substrate completeness: the data
-    pipeline / LM pretraining driver; also the non-RL baseline)."""
+    pipeline / LM pretraining driver; also the non-RL baseline).
+    grad_constraint/mesh/rules as in ``make_lm_train_step`` — ``--mode lm
+    --mesh-data N --mesh-model M`` runs through the same 2-D mesh path."""
+    mesh_ctx, shard_batch = _make_lm_mesh_fns(mesh, rules)
 
     def loss_fn(params, batch):
         tokens = batch["tokens"]          # (B, S+1)
@@ -241,9 +277,13 @@ def make_lm_pretrain_step(cfg, opt, loss_chunk=512):
         return loss + cfg.router_aux_weight * lb + cfg.router_z_weight * zl, loss
 
     def train_step(params, opt_state, step, batch):
-        grads, xent = jax.grad(loss_fn, has_aux=True)(params, batch)
-        updates, opt_state = opt.update(grads, opt_state, params, step)
-        params = apply_updates(params, updates)
+        with mesh_ctx():
+            batch = shard_batch(batch)
+            grads, xent = jax.grad(loss_fn, has_aux=True)(params, batch)
+            if grad_constraint is not None:
+                grads = grad_constraint(grads)
+            updates, opt_state = opt.update(grads, opt_state, params, step)
+            params = apply_updates(params, updates)
         return params, opt_state, {"loss": xent}
 
     return train_step

@@ -839,7 +839,13 @@ def lm_rl_step_from_rollout(lm_train_step: Callable) -> Callable:
 
 class DataSource:
     """A RolloutSource over any iterator of ready batches — the non-RL
-    substrate (LM pretraining) runs through the same Runtime loop."""
+    substrate (LM pretraining) runs through the same Runtime loop.
+
+    SourceState: when the iterator itself is checkpointable (exposes
+    ``state_dict``/``load_state_dict``, e.g. data.PackedBatchIterator's
+    seed+offset), its state rides inside the source state — extending the
+    bit-exact ``--resume`` guarantee to ``--mode lm``. Plain iterators
+    checkpoint as stateless (the pre-protocol behavior)."""
 
     def __init__(self, iterator: Iterator, *, frames_per_batch: int = 0,
                  transform: Optional[Callable] = None,
@@ -863,9 +869,21 @@ class DataSource:
             self._close()
 
     def state_dict(self) -> Dict[str, Any]:
-        # Iterator position is owned by the iterator (re-seed/skip it when
-        # resuming a data pipeline); the source itself carries no state.
-        return {"kind": type(self).__name__}
+        # Iterator position is owned by the iterator; checkpoint it when
+        # the iterator answers the protocol (class docstring).
+        state_fn = getattr(self._it, "state_dict", None)
+        return {"kind": type(self).__name__,
+                "iterator": None if state_fn is None else state_fn()}
 
     def load_state_dict(self, state: Dict[str, Any]) -> None:
         _check_kind(state, self)
+        it_state = state.get("iterator") if hasattr(state, "get") else None
+        if it_state is None:
+            return   # stateless iterator / pre-protocol checkpoint
+        load_fn = getattr(self._it, "load_state_dict", None)
+        if load_fn is None:
+            raise ValueError(
+                "checkpoint carries iterator state "
+                f"({it_state.get('kind')!r}) but this run's iterator is "
+                "not checkpointable — resume with the same data pipeline")
+        load_fn(it_state)

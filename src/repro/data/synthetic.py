@@ -35,46 +35,91 @@ def markov_corpus(vocab_size: int, length: int, seed: int = 0,
 
 class PackedBatchIterator:
     """Yields {"tokens": (B, S+1) int32} batches from a corpus, with a
-    background prefetch thread (the host data-pipeline substrate)."""
+    background prefetch thread (the host data-pipeline substrate).
+
+    Checkpointable: batch ``i`` is derived from ``(seed, i)`` alone (an
+    independent per-batch Generator), so the stream position is just a
+    (seed, offset) pair — ``state_dict``/``load_state_dict`` let a resumed
+    ``--mode lm`` run replay the EXACT batch sequence of an uninterrupted
+    one (prefetched-but-unconsumed batches are regenerated, not lost).
+    """
 
     def __init__(self, corpus: np.ndarray, batch_size: int, seq_len: int,
                  seed: int = 0, prefetch: int = 4):
         self.corpus = np.asarray(corpus, np.int32)
         self.batch_size = batch_size
         self.seq_len = seq_len
-        self.rng = np.random.default_rng(seed)
-        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self.seed = int(seed)
+        self._prefetch = prefetch
+        self._emitted = 0   # index of the next batch __next__ hands out
+        self._start_thread()
+
+    def _start_thread(self):
+        self._q: queue.Queue = queue.Queue(maxsize=self._prefetch)
         self._stop = threading.Event()
+        self._produced = self._emitted  # next index the thread generates
         self._thread = threading.Thread(target=self._fill, daemon=True)
         self._thread.start()
 
-    def _sample(self):
+    def _batch_at(self, index: int) -> dict:
+        rng = np.random.default_rng([self.seed, index])
         n = len(self.corpus) - self.seq_len - 1
-        starts = self.rng.integers(0, n, size=self.batch_size)
+        starts = rng.integers(0, n, size=self.batch_size)
         toks = np.stack([self.corpus[s:s + self.seq_len + 1]
                          for s in starts])
         return {"tokens": toks}
 
     def _fill(self):
         while not self._stop.is_set():
-            try:
-                self._q.put(self._sample(), timeout=0.5)
-            except queue.Full:
-                continue
+            item = (self._produced, self._batch_at(self._produced))
+            placed = False
+            while not self._stop.is_set() and not placed:
+                try:
+                    self._q.put(item, timeout=0.5)
+                    placed = True
+                except queue.Full:
+                    pass
+            if placed:
+                self._produced += 1
 
     def __iter__(self) -> Iterator[dict]:
         return self
 
     def __next__(self) -> dict:
-        return self._q.get()
+        index, batch = self._q.get()
+        self._emitted = index + 1
+        return batch
 
-    def close(self):
+    def _teardown(self):
+        """Stop AND join the prefetch thread (a lingering thread would keep
+        filling the dead queue), draining so a blocked put wakes up."""
         self._stop.set()
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        self._thread.join(timeout=5.0)
+
+    def close(self):
+        self._teardown()
+
+    # -- SourceState protocol (via DataSource.state_dict) --------------------
+
+    def state_dict(self) -> dict:
+        return {"kind": type(self).__name__, "seed": self.seed,
+                "offset": self._emitted}
+
+    def load_state_dict(self, state: dict) -> None:
+        if state.get("kind") != type(self).__name__:
+            raise ValueError(
+                f"iterator state is {state.get('kind')!r} but this run "
+                f"built {type(self).__name__} — resume with the same data "
+                "pipeline")
+        self._teardown()
+        self.seed = int(state["seed"])
+        self._emitted = int(state["offset"])
+        self._start_thread()
 
 
 def rl_episode_batch(rng: np.random.Generator, batch_size: int, seq_len: int,

@@ -144,6 +144,19 @@ def spec_for(logical_axes: Sequence[str], mesh: Mesh, rules: Dict,
     return P(*parts)
 
 
+def logical_to_mesh(logical_axes: Sequence[str], mesh: Mesh, rules: Dict,
+                    shape: Optional[Sequence[int]] = None,
+                    fallback_model: bool = False) -> P:
+    """Public name for the logical-axes -> PartitionSpec mapping
+    (MaxText's ``logical_to_mesh_axes`` analogue). The contract — pinned by
+    tests/test_sharding_spec.py over every rules table — is that the
+    returned spec only names live mesh axes, never repeats one, and (when
+    ``shape`` is given) only maps dimensions the mesh-axis size divides.
+    """
+    return spec_for(logical_axes, mesh, rules, shape,
+                    fallback_model=fallback_model)
+
+
 def param_shardings(axes_tree, mesh: Mesh, rules: Dict, shapes_tree=None):
     """Tree of NamedSharding for a params tree (axes_tree from init)."""
     is_axes = lambda x: isinstance(x, tuple) and all(  # noqa: E731
@@ -313,6 +326,30 @@ def shard_rollout(batch, mesh: Mesh, rules: Dict):
 
     return {k: jax.tree.map(lambda x, k=k: leaf(k, x), v)
             for k, v in batch.items()}
+
+
+def shard_lm_batch(batch, mesh: Mesh, rules: Dict):
+    """Constrain every leaf of a BATCH-MAJOR LM token batch (tokens
+    (B, S+1), behavior_logprob/reward/done (B, S), vision (B, Sv, d)) to
+    shard its leading batch dimension over the data axes named by the
+    rules' 'act_batch' entry (replicated when non-divisible).
+
+    The model-axis sharding of parameters and activations comes from the
+    rules table via ``param_shardings`` and the ``constrain()`` calls
+    inside the model (active under ``use_rules``); this helper pins only
+    the input layout, so the cross-data-axis gradient all-reduce falls out
+    of sharding propagation exactly as in the rl-agent path
+    (``shard_rollout``).
+    """
+
+    def leaf(x):
+        spec = batch_axes_spec(mesh, rules, jnp.ndim(x), jnp.shape(x), 0)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(leaf, batch)
 
 
 def replicate(tree, mesh: Mesh):

@@ -45,6 +45,28 @@ def make_host_mesh():
     return make_mesh((n,), ("data",))
 
 
+def make_mesh2d(data=1, model=1, devices=None):
+    """The first ``data * model`` devices as a 2-D ("data", "model") mesh —
+    the LM-path learner mesh (``--mesh-data N --mesh-model M``).
+
+    ``devices`` defaults to the GLOBAL device set (``jax.devices()``), so
+    under a ``jax.distributed`` bootstrap (launch/multihost.py, or
+    ``train.py --coordinator``) the same call builds the whole-pod mesh;
+    on CPU force host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``. At
+    ``(data=1, model=1)`` the learner programs built on this mesh are
+    bit-identical to the unmeshed ones (tests/test_mesh2d.py).
+    """
+    devices = jax.devices() if devices is None else list(devices)
+    n = data * model
+    if n > len(devices):
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {n} devices but only "
+            f"{len(devices)} visible (on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return make_mesh((data, model), ("data", "model"), devices=devices[:n])
+
+
 def make_data_mesh(n=None):
     """The first ``n`` local devices as a 1-D ("data",) mesh — the
     data-parallel RL learner mesh (``--mesh-data N``). On CPU, run under

@@ -20,14 +20,18 @@ import argparse
 import time
 
 
-def bootstrap(args):
+def bootstrap(coordinator=None, num_processes=1, process_id=0):
+    """Wire this process into the global device mesh (no-op single-host
+    when ``coordinator`` is None). Shared by this entry point and
+    ``launch/train.py --coordinator``; must run before any jax device
+    query so ``jax.devices()`` returns the GLOBAL device set."""
     import jax
-    if args.coordinator:
+    if coordinator:
         jax.distributed.initialize(
-            coordinator_address=args.coordinator,
-            num_processes=args.num_processes,
-            process_id=args.process_id)
-    print(f"[host {args.process_id}] devices: local={jax.local_device_count()}"
+            coordinator_address=coordinator,
+            num_processes=num_processes,
+            process_id=process_id)
+    print(f"[host {process_id}] devices: local={jax.local_device_count()}"
           f" global={jax.device_count()}")
     return jax
 
@@ -47,7 +51,7 @@ def main(argv=None):
     p.add_argument("--steps", type=int, default=10)
     args = p.parse_args(argv)
 
-    jax = bootstrap(args)
+    jax = bootstrap(args.coordinator, args.num_processes, args.process_id)
 
     from repro.configs.base import INPUT_SHAPES
     from repro.distributed.sharding import RULE_SETS
@@ -65,8 +69,8 @@ def main(argv=None):
             if n % m == 0:
                 model = m
                 break
-        from repro.launch.mesh import make_mesh
-        mesh = make_mesh((n // model, model), ("data", "model"))
+        from repro.launch.mesh import make_mesh2d
+        mesh = make_mesh2d(n // model, model)
     print(f"[host {args.process_id}] mesh {dict(mesh.shape)}")
 
     rules_name = resolve_rules(args.rules, args.shape, args.arch)

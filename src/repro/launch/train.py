@@ -13,6 +13,14 @@ Modes:
               applies V-trace (DESIGN.md §2).
   lm        — plain next-token pretraining on the synthetic corpus.
 
+Meshes: rl-agent shards over a 1-D ("data",) mesh (--mesh-data); the LM
+paths shard over a 2-D ("data","model") mesh (--mesh-data x --mesh-model,
+MEGATRON_RULES: params over "model", token batch over "data") and run
+multi-host via --coordinator/--num-processes/--process-id (the
+jax.distributed bootstrap of launch/multihost.py — the mesh is built from
+the GLOBAL device set, so the same entry point runs single-host CPU CI
+and a real pod slice).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --mode rl-agent --env catch \
       --steps 500
@@ -24,6 +32,9 @@ Examples:
       --arch granite-moe-1b-a400m --reduced --steps 50
   PYTHONPATH=src python -m repro.launch.train --mode lm --arch qwen3-4b \
       --reduced --steps 100 --checkpoint-dir /tmp/ckpt
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.train --mode lm-rl --arch qwen3-4b --reduced \
+      --steps 50 --mesh-data 2 --mesh-model 2
 """
 
 from __future__ import annotations
@@ -113,22 +124,56 @@ def build_rl_agent(args):
     return source, step_fn, params, opt.init(params), extras
 
 
+def _lm_mesh_setup(args, params, axes):
+    """2-D ("data","model") mesh context for the LM paths: place the
+    params per MEGATRON_RULES (model-sharded where divisible; the token
+    batch shards over "data" inside the learner step) and build the
+    grad-constraint hook pinning gradients to the same layout. Returns
+    (mesh, rules, placed_params, grad_constraint) — (None, None, params,
+    None) when neither --mesh-data nor --mesh-model is set, which
+    compiles to the exact pre-mesh program."""
+    if not (args.mesh_data or args.mesh_model):
+        return None, None, params, None
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_mesh2d
+    mesh = make_mesh2d(args.mesh_data or 1, args.mesh_model or 1)
+    rules = shd.MEGATRON_RULES
+    pshard = shd.param_shardings(axes, mesh, rules, params)
+    params = jax.device_put(params, pshard)
+    grad_constraint = lambda grads: jax.tree.map(  # noqa: E731
+        jax.lax.with_sharding_constraint, grads, pshard)
+    return mesh, rules, params, grad_constraint
+
+
+def _restore_shardings(params, opt_state):
+    """extras entry telling --resume to device_put each restored leaf onto
+    the mesh as it is read (checkpoint.restore ``shardings=``)."""
+    return {"params": jax.tree.map(lambda x: x.sharding, params),
+            "opt_state": jax.tree.map(lambda x: x.sharding, opt_state)}
+
+
 def build_lm_rl(args):
     cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
     train_cfg = TrainConfig(optimizer="adamw", learning_rate=args.lr or 3e-4,
                             grad_clip=1.0, total_steps=args.steps,
                             lr_schedule="constant", entropy_cost=0.003)
-    params, _ = model_lib.init(jax.random.PRNGKey(train_cfg.seed), cfg)
+    params, axes = model_lib.init(jax.random.PRNGKey(train_cfg.seed), cfg)
     opt = make_optimizer(train_cfg)
+    mesh, rules, params, grad_constraint = _lm_mesh_setup(args, params, axes)
+    opt_state = opt.init(params)   # zeros_like inherits the param shardings
     source = sources_lib.GeneratorSource(
         cfg, batch_size=args.batch or 16, episode_length=args.seq,
         key=jax.random.PRNGKey(7))
     step_fn = jax.jit(sources_lib.lm_rl_step_from_rollout(
         learner_lib.make_lm_train_step(cfg, opt, train_cfg,
                                        loss_chunk=args.seq,
-                                       vtrace_impl=args.vtrace_impl)))
-    return source, step_fn, params, opt.init(params), {
-        "log_keys": ("reward_per_step", "pg_loss", "entropy_loss")}
+                                       vtrace_impl=args.vtrace_impl,
+                                       grad_constraint=grad_constraint,
+                                       mesh=mesh, rules=rules)))
+    extras = {"log_keys": ("reward_per_step", "pg_loss", "entropy_loss")}
+    if mesh is not None:
+        extras["restore_shardings"] = _restore_shardings(params, opt_state)
+    return source, step_fn, params, opt_state, extras
 
 
 def build_lm(args):
@@ -137,29 +182,44 @@ def build_lm(args):
     train_cfg = TrainConfig(optimizer="adamw", learning_rate=args.lr or 3e-4,
                             grad_clip=1.0, total_steps=args.steps,
                             lr_schedule="cosine", warmup_steps=10)
-    params, _ = model_lib.init(jax.random.PRNGKey(0), cfg)
+    params, axes = model_lib.init(jax.random.PRNGKey(0), cfg)
     opt = make_optimizer(train_cfg)
+    mesh, rules, params, grad_constraint = _lm_mesh_setup(args, params, axes)
+    opt_state = opt.init(params)
     step_fn = jax.jit(learner_lib.make_lm_pretrain_step(
-        cfg, opt, loss_chunk=min(512, args.seq)))
+        cfg, opt, loss_chunk=min(512, args.seq),
+        grad_constraint=grad_constraint, mesh=mesh, rules=rules))
 
     b = args.batch or 16
     corpus = markov_corpus(cfg.vocab_size, 200_000, seed=1)
-    it = PackedBatchIterator(corpus, b, args.seq)
+    # Checkpointable iterator (seed + offset): its state rides in every
+    # checkpoint through DataSource.state_dict, so --resume replays the
+    # exact batch sequence (bit-identical to an uninterrupted run).
+    it = PackedBatchIterator(corpus, b, args.seq, seed=train_cfg.seed)
     vision = None
     if cfg.vision_seq:
         vision = jnp.zeros((b, cfg.vision_seq, cfg.d_model),
                            jnp.dtype(cfg.dtype))
+    put = jnp.asarray
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.distributed.sharding import batch_axes_spec
+        put = lambda v: jax.device_put(v, NamedSharding(  # noqa: E731
+            mesh, batch_axes_spec(mesh, rules, v.ndim, v.shape, 0)
+            or PartitionSpec()))
 
     def transform(batch):
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        batch = {k: put(v) for k, v in batch.items()}
         if vision is not None:
             batch["vision"] = vision
         return batch
 
     source = sources_lib.DataSource(it, frames_per_batch=b * args.seq,
                                     transform=transform, close=it.close)
-    return source, step_fn, params, opt.init(params), {
-        "log_keys": ("loss",), "fps_label": "tok/s"}
+    extras = {"log_keys": ("loss",), "fps_label": "tok/s"}
+    if mesh is not None:
+        extras["restore_shardings"] = _restore_shardings(params, opt_state)
+    return source, step_fn, params, opt_state, extras
 
 
 _BUILDERS = {"rl-agent": build_rl_agent, "lm-rl": build_lm_rl,
@@ -177,10 +237,26 @@ def main(argv=None):
     p.add_argument("--sync", action="store_true",
                    help="disable double-buffered rollout dispatch")
     p.add_argument("--mesh-data", type=int, default=None, metavar="N",
-                   help="rl-agent only: data-parallel learner over a 1-D "
-                        "('data',) mesh of N devices (ShardedDeviceSource "
-                        "+ sharded train step; on CPU set XLA_FLAGS="
+                   help="data-parallel axis size: rl-agent shards batch + "
+                        "source over a 1-D ('data',) mesh "
+                        "(ShardedDeviceSource + sharded train step); "
+                        "lm/lm-rl use it as the 'data' axis of the 2-D "
+                        "('data','model') mesh (on CPU set XLA_FLAGS="
                         "--xla_force_host_platform_device_count=N)")
+    p.add_argument("--mesh-model", type=int, default=None, metavar="M",
+                   help="lm/lm-rl only: model-parallel axis size of the "
+                        "2-D ('data','model') mesh — MEGATRON_RULES shard "
+                        "params/activations over 'model' and the token "
+                        "batch over 'data'; composes with --mesh-data "
+                        "and --resume")
+    p.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                   help="multi-host: address of process 0 "
+                        "(jax.distributed bootstrap, launch/multihost.py); "
+                        "the mesh is then built from the GLOBAL device set")
+    p.add_argument("--num-processes", type=int, default=1,
+                   help="multi-host: total process count")
+    p.add_argument("--process-id", type=int, default=0,
+                   help="multi-host: this process's index")
     p.add_argument("--vtrace-impl", choices=["scan", "kernel"],
                    default="scan",
                    help="rl-agent/lm-rl: V-trace recursion — reverse-scan "
@@ -212,9 +288,22 @@ def main(argv=None):
     p.add_argument("--lr", type=float, default=None)
     p.add_argument("--checkpoint-dir", default=None)
     args = p.parse_args(argv)
+    if args.mesh_model and args.mode == "rl-agent":
+        p.error("--mesh-model applies to the LM paths (--mode lm/lm-rl); "
+                "rl-agent is data-parallel only (--mesh-data)")
+    if args.num_processes > 1 and not args.coordinator:
+        # without the bootstrap each process would train a full
+        # independent model and clobber the shared checkpoint dir
+        p.error("--num-processes > 1 requires --coordinator")
+    if args.coordinator:
+        # must run before the builders query devices: the mesh factories
+        # read jax.devices(), which is global only after the bootstrap.
+        from repro.launch.multihost import bootstrap
+        bootstrap(args.coordinator, args.num_processes, args.process_id)
 
     source, step_fn, params, opt_state, extras = _BUILDERS[args.mode](args)
     placement = extras.pop("placement", None)
+    restore_shardings = extras.pop("restore_shardings", None)
     start_step = 0
     if args.resume:
         if not args.checkpoint_dir:
@@ -225,12 +314,20 @@ def main(argv=None):
             print(f"--resume: no checkpoint under {args.checkpoint_dir}, "
                   "starting fresh")
         else:
+            # sharded-aware restore: with restore_shardings each leaf is
+            # device_put straight onto its mesh sharding (model-sharded
+            # params land distributed, no replicated host tree).
             restored, meta = ckpt_lib.restore(
-                path, {"params": params, "opt_state": opt_state})
-            place = placement or (
-                lambda tree: jax.tree.map(jnp.asarray, tree))
-            params = place(restored["params"])
-            opt_state = place(restored["opt_state"])
+                path, {"params": params, "opt_state": opt_state},
+                shardings=restore_shardings)
+            if restore_shardings is not None:
+                params = restored["params"]
+                opt_state = restored["opt_state"]
+            else:
+                place = placement or (
+                    lambda tree: jax.tree.map(jnp.asarray, tree))
+                params = place(restored["params"])
+                opt_state = place(restored["opt_state"])
             start_step = int(meta.get("step", 0))
             # SourceState: replay the exact rollout stream (env carries,
             # RNG, replay slots). Checkpoints from before the protocol

@@ -1,4 +1,10 @@
+import glob
 import os
+import re
+import signal
+import subprocess
+import sys
+import time
 
 # Tests see the single real CPU device (the 512-device override is dryrun's
 # alone); cap compilation parallelism for stability.
@@ -7,3 +13,71 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_default_matmul_precision", "highest")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# ---------------------------------------------------------------------------
+# Multi-device subprocess harness, shared by test_sharded / test_resume /
+# test_mesh2d: the tier-1 env has ONE device, so every mesh>1 test runs in
+# a hermetic subprocess under a forced XLA host device count.
+# ---------------------------------------------------------------------------
+
+
+def forced_cpu_env(num_devices: int) -> dict:
+    """A subprocess environment with ``num_devices`` forced XLA host CPU
+    devices and ``src/`` importable — any inherited device-count forcing
+    is replaced, not appended to."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = (flags + " --xla_force_host_platform_device_count="
+                        + str(num_devices)).strip()
+    return env
+
+
+def run_forced(args=None, *, script=None, devices=8, timeout=600,
+               check=True):
+    """Run ``python -c script`` (or ``python *args``) under
+    ``forced_cpu_env(devices)``; with ``check`` (default) a non-zero exit
+    fails the test with the subprocess output attached."""
+    cmd = [sys.executable] + (["-c", script] if script is not None
+                              else list(args))
+    proc = subprocess.run(cmd, env=forced_cpu_env(devices),
+                          capture_output=True, text=True, timeout=timeout)
+    if check:
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+    return proc
+
+
+def sigkill_at_boundary(cmd, ckpt_dir, boundary_step, *, devices,
+                        deadline_s=540):
+    """Launch ``python *cmd`` under forced devices, SIGKILL it once the
+    ``step_{boundary_step}`` boundary checkpoint lands, then prune any
+    later checkpoints so a subsequent --resume provably starts from
+    mid-run state (if the run outraces the kill, pruning still leaves a
+    genuine boundary checkpoint — the kill adds realism, not
+    correctness). Shared by the rl-agent (test_resume) and lm
+    (test_mesh2d) kill/resume suites."""
+    marker = os.path.join(ckpt_dir, f"step_{boundary_step}.npz")
+    p = subprocess.Popen([sys.executable] + list(cmd),
+                         env=forced_cpu_env(devices),
+                         stdout=subprocess.DEVNULL,
+                         stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.time() + deadline_s
+        while time.time() < deadline and p.poll() is None:
+            if os.path.exists(marker):
+                p.send_signal(signal.SIGKILL)
+                break
+            time.sleep(0.05)
+        p.wait(timeout=60)
+    finally:
+        if p.poll() is None:
+            p.kill()
+    assert os.path.exists(marker)
+    for f in glob.glob(os.path.join(ckpt_dir, "step_*.npz")):
+        if int(os.path.basename(f)[5:-4]) > boundary_step:
+            os.remove(f)

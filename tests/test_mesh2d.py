@@ -1,0 +1,278 @@
+"""2-D ("data","model") mesh for the LM-policy paths (PR 5).
+
+In-process (single device):
+  * ``make_mesh2d`` shape/axes contract + loud over-subscription error;
+  * mesh (1, 1) is BIT-identical to the unmeshed LM train AND pretrain
+    steps (per-step losses and final params) — the degenerate-mesh parity
+    guarantee the rl-agent path already has.
+
+Multi-device (subprocess via conftest.run_forced, so it passes in the
+single-device tier-1 env too):
+  * (data=2, model=2) under 8 forced host devices matches the unmeshed
+    per-step losses to 1e-5 for both LM steps (and the 3-step training
+    trajectory to 1e-4 — reduction-order noise compounds through the
+    optimizer), with the params genuinely model-sharded;
+  * the acceptance criterion: a ``--mode lm --mesh-model 2`` run
+    SIGKILLed mid-training and ``--resume``d reaches final params bitwise
+    equal to an uninterrupted run (the checkpointable PackedBatchIterator
+    riding inside DataSource's SourceState).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_forced, sigkill_at_boundary
+from repro import checkpoint as ckpt_lib
+from repro.configs import get_reduced_config
+from repro.configs.base import TrainConfig
+from repro.core import learner as learner_lib
+from repro.data import rl_episode_batch
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh2d
+from repro.models import model as model_lib
+from repro.optim import make_optimizer
+
+B, S = 4, 16
+
+
+def _lm_setup():
+    cfg = get_reduced_config("qwen3-4b")
+    tc = TrainConfig(optimizer="adamw", learning_rate=1e-3, grad_clip=1.0,
+                     lr_schedule="constant")
+    params, axes = model_lib.init(jax.random.PRNGKey(0), cfg)
+    return cfg, tc, params, axes, make_optimizer(tc)
+
+
+def _mesh_ctx(mesh, params0, axes):
+    """(placed params, grad_constraint, rules) — exactly what train.py's
+    ``_lm_mesh_setup`` builds for the LM paths."""
+    rules = shd.MEGATRON_RULES
+    pshard = shd.param_shardings(axes, mesh, rules, params0)
+    params = jax.device_put(params0, pshard)
+    grad_constraint = lambda g: jax.tree.map(  # noqa: E731
+        jax.lax.with_sharding_constraint, g, pshard)
+    return params, grad_constraint, rules
+
+
+def _assert_trees_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+# ---------------------------------------------------------------------------
+# mesh factory contract
+
+
+def test_make_mesh2d_contract():
+    mesh = make_mesh2d(1, 1)
+    assert mesh.axis_names == ("data", "model")
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+    with pytest.raises(ValueError, match="devices"):
+        make_mesh2d(64, 64)
+
+
+# ---------------------------------------------------------------------------
+# mesh (1,1) bit-parity with the unmeshed LM steps
+
+
+def test_lm_train_step_mesh11_bit_identical():
+    """3 IMPALA-LM learner steps through the meshed path at (1,1) == the
+    unmeshed path, bit for bit (losses and final params)."""
+    cfg, tc, params0, axes, opt = _lm_setup()
+    rng = np.random.default_rng(0)
+    batches = [{k: jnp.asarray(v) for k, v in
+                rl_episode_batch(rng, B, S, cfg.vocab_size).items()}
+               for _ in range(3)]
+
+    def run(mesh):
+        params, grad_constraint, rules = (params0, None, None) \
+            if mesh is None else _mesh_ctx(mesh, params0, axes)
+        step = jax.jit(learner_lib.make_lm_train_step(
+            cfg, opt, tc, loss_chunk=S, grad_constraint=grad_constraint,
+            mesh=mesh, rules=rules))
+        opt_state = opt.init(params)
+        losses = []
+        for s, batch in enumerate(batches):
+            params, opt_state, m = step(params, opt_state, jnp.int32(s),
+                                        batch)
+            losses.append(float(m["loss"]))
+        return losses, params
+
+    losses_a, params_a = run(None)
+    losses_b, params_b = run(make_mesh2d(1, 1))
+    assert losses_a == losses_b
+    _assert_trees_equal(params_a, params_b)
+
+
+def test_lm_pretrain_step_mesh11_bit_identical():
+    """Same guarantee for the next-token pretraining step (--mode lm)."""
+    cfg, tc, params0, axes, opt = _lm_setup()
+    rng = np.random.default_rng(1)
+    batches = [{"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)}
+        for _ in range(3)]
+
+    def run(mesh):
+        params, grad_constraint, rules = (params0, None, None) \
+            if mesh is None else _mesh_ctx(mesh, params0, axes)
+        step = jax.jit(learner_lib.make_lm_pretrain_step(
+            cfg, opt, loss_chunk=S, grad_constraint=grad_constraint,
+            mesh=mesh, rules=rules))
+        opt_state = opt.init(params)
+        losses = []
+        for s, batch in enumerate(batches):
+            params, opt_state, m = step(params, opt_state, jnp.int32(s),
+                                        batch)
+            losses.append(float(m["loss"]))
+        return losses, params
+
+    losses_a, params_a = run(None)
+    losses_b, params_b = run(make_mesh2d(1, 1))
+    assert losses_a == losses_b
+    _assert_trees_equal(params_a, params_b)
+
+
+# ---------------------------------------------------------------------------
+# (data=2, model=2) loss parity vs unmeshed (8 forced host devices,
+# hermetic subprocess — the pattern of test_sharded.py)
+
+_PARITY_SCRIPT = r"""
+import jax, jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+from repro.configs import get_reduced_config
+from repro.configs.base import TrainConfig
+from repro.core import learner as L
+from repro.data import rl_episode_batch
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh2d
+from repro.models import model as M
+from repro.optim import make_optimizer
+
+B, S = 8, 16
+cfg = get_reduced_config("qwen3-4b")
+tc = TrainConfig(optimizer="adamw", learning_rate=1e-3, grad_clip=1.0,
+                 lr_schedule="constant")
+params0, axes = M.init(jax.random.PRNGKey(0), cfg)
+opt = make_optimizer(tc)
+rng = np.random.default_rng(0)
+rl_batches = [rl_episode_batch(rng, B, S, cfg.vocab_size)
+              for _ in range(3)]
+tok_batches = [{"tokens": rng.integers(0, cfg.vocab_size,
+                                       (B, S + 1)).astype(np.int32)}
+               for _ in range(3)]
+
+
+def ctx(mesh):
+    if mesh is None:
+        return params0, None, None
+    rules = shd.MEGATRON_RULES
+    pshard = shd.param_shardings(axes, mesh, rules, params0)
+    grad_constraint = lambda g: jax.tree.map(
+        jax.lax.with_sharding_constraint, g, pshard)
+    return jax.device_put(params0, pshard), grad_constraint, rules
+
+
+def losses_on(mesh, make_step, batches, carry):
+    # carry=False: every step starts from params0 (program-level parity,
+    # no drift accumulation); carry=True: the real 3-step trajectory.
+    params, grad_constraint, rules = ctx(mesh)
+    step = jax.jit(make_step(grad_constraint, mesh, rules))
+    opt_state0 = opt.init(params)
+    opt_state, out = opt_state0, []
+    for s, b in enumerate(batches):
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        if carry:
+            params, opt_state, m = step(params, opt_state, jnp.int32(s), b)
+        else:
+            _, _, m = step(params, opt_state0, jnp.int32(0), b)
+        out.append(float(m["loss"]))
+    return out, params
+
+
+mesh = make_mesh2d(2, 2)
+for name, make_step, batches in [
+    ("lm-rl", lambda gc, me, ru: L.make_lm_train_step(
+        cfg, opt, tc, loss_chunk=S, grad_constraint=gc, mesh=me, rules=ru),
+     rl_batches),
+    ("lm", lambda gc, me, ru: L.make_lm_pretrain_step(
+        cfg, opt, loss_chunk=S, grad_constraint=gc, mesh=me, rules=ru),
+     tok_batches),
+]:
+    # per-step program parity from identical params: 1e-5
+    s_ref, _ = losses_on(None, make_step, batches, carry=False)
+    s_22, _ = losses_on(mesh, make_step, batches, carry=False)
+    print(name, "per-step unmeshed", s_ref)
+    print(name, "per-step mesh22  ", s_22)
+    np.testing.assert_allclose(s_ref, s_22, rtol=1e-5, atol=1e-5)
+    # 3-step trajectory: reduction-order noise compounds through the
+    # adamw updates, so the bound is drift-scaled
+    l_ref, _ = losses_on(None, make_step, batches, carry=True)
+    l_22, p_22 = losses_on(mesh, make_step, batches, carry=True)
+    print(name, "trajectory unmeshed", l_ref)
+    print(name, "trajectory mesh22  ", l_22)
+    np.testing.assert_allclose(l_ref, l_22, rtol=1e-4, atol=1e-4)
+    # the params are genuinely distributed: at least one leaf spans >1
+    # device with strictly smaller per-device shards (model-sharded)
+    sharded = [x for x in jax.tree.leaves(p_22)
+               if len(x.sharding.device_set) == 4
+               and any(s.data.shape != x.shape
+                       for s in x.addressable_shards)]
+    assert sharded, name + ": no parameter actually model-sharded"
+print("MESH2D PARITY OK")
+"""
+
+
+def test_lm_mesh22_matches_unmeshed_subprocess():
+    proc = run_forced(script=_PARITY_SCRIPT, devices=8)
+    assert "MESH2D PARITY OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# acceptance: --mode lm --mesh-model 2, SIGKILLed, --resume, bitwise
+# (subprocess under 2 forced host devices so it runs everywhere)
+
+
+def _lm_cmd(ckpt_dir, extra=()):
+    return ["-m", "repro.launch.train", "--mode", "lm", "--arch",
+            "qwen3-4b", "--reduced", "--batch", "8", "--seq", "32",
+            "--steps", "8", "--mesh-model", "2",
+            "--checkpoint-dir", ckpt_dir, *extra]
+
+
+def test_lm_mesh_model_sigkill_resume_bit_exact(tmp_path):
+    dir_a, dir_b = str(tmp_path / "a"), str(tmp_path / "b")
+
+    # leg A: uninterrupted
+    run_forced(_lm_cmd(dir_a), devices=2)
+
+    # leg B: SIGKILL once the step-3 boundary checkpoint lands
+    sigkill_at_boundary(_lm_cmd(dir_b, ["--checkpoint-every", "3"]),
+                        dir_b, 3, devices=2)
+
+    # leg C: resume to the same horizon
+    proc = run_forced(_lm_cmd(dir_b, ["--resume"]), devices=2)
+    assert "source state restored" in proc.stdout
+
+    # the iterator position rode inside the DataSource state
+    state = ckpt_lib.restore_structured(os.path.join(dir_b, "step_3.npz"),
+                                        "source")
+    assert state["kind"] == "DataSource"
+    assert state["iterator"]["kind"] == "PackedBatchIterator"
+    assert state["iterator"]["offset"] == 3
+
+    # final params + optimizer state bitwise identical to leg A
+    with np.load(os.path.join(dir_a, "step_8.npz")) as a, \
+            np.load(os.path.join(dir_b, "step_8.npz")) as b:
+        checked = 0
+        for k in a.files:
+            if k.startswith(("params/", "opt_state/")):
+                np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+                checked += 1
+        assert checked > 0

@@ -18,18 +18,14 @@ an uninterrupted one.
   devices).
 """
 
-import glob
 import os
-import signal
-import subprocess
-import sys
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import run_forced, sigkill_at_boundary
 from repro import checkpoint as ckpt_lib
 from repro.configs.atari_impala import small_train
 from repro.core import learner as learner_lib
@@ -43,7 +39,6 @@ from repro.models.convnet import init_agent, minatar_net
 from repro.optim import make_optimizer
 
 T, B = 5, 4
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _agent():
@@ -208,6 +203,59 @@ def test_generator_and_data_source_state():
     d.load_state_dict(d.state_dict())  # stateless but protocol-complete
 
 
+def test_packed_batch_iterator_state_roundtrip():
+    """seed+offset checkpointing: batch i depends on (seed, i) alone, so a
+    restored replica replays the exact stream — including batches the
+    killed run had prefetched but never consumed."""
+    from repro.data import PackedBatchIterator, markov_corpus
+    corpus = markov_corpus(64, 3000, seed=5)
+    a = PackedBatchIterator(corpus, 4, 16, seed=11)
+    b = PackedBatchIterator(corpus, 4, 16, seed=999)  # state must win
+    try:
+        for _ in range(3):
+            next(a)
+        state = a.state_dict()
+        assert state == {"kind": "PackedBatchIterator", "seed": 11,
+                         "offset": 3}
+        b.load_state_dict(state)
+        for _ in range(4):
+            np.testing.assert_array_equal(next(a)["tokens"],
+                                          next(b)["tokens"])
+    finally:
+        a.close()
+        b.close()
+
+
+def test_data_source_checkpoints_iterator_position():
+    """DataSource nests a checkpointable iterator's state — the --mode lm
+    piece of the bit-exact --resume guarantee."""
+    from repro.data import PackedBatchIterator, markov_corpus
+    corpus = markov_corpus(64, 3000, seed=5)
+    ia = PackedBatchIterator(corpus, 4, 16, seed=1)
+    ib = PackedBatchIterator(corpus, 4, 16, seed=2)
+    a = DataSource(ia, frames_per_batch=64, close=ia.close)
+    b = DataSource(ib, frames_per_batch=64, close=ib.close)
+    try:
+        a.next_batch(None)
+        a.next_batch(None)
+        state = a.state_dict()
+        assert state["iterator"]["offset"] == 2
+        b.load_state_dict(state)
+        for _ in range(3):
+            np.testing.assert_array_equal(a.next_batch(None)["tokens"],
+                                          b.next_batch(None)["tokens"])
+        # saved iterator state, resumed with a non-checkpointable iterator:
+        # loud failure, not a silent fresh start
+        with pytest.raises(ValueError, match="not checkpointable"):
+            DataSource(iter([]), frames_per_batch=1).load_state_dict(state)
+        # mismatched iterator kinds fail loudly too
+        with pytest.raises(ValueError, match="same data pipeline"):
+            ib.load_state_dict({"kind": "SomethingElse"})
+    finally:
+        a.stop()
+        b.stop()
+
+
 def test_resume_composition_mismatch_fails_loudly():
     env, apply_fn, params = _agent()
     dev = DeviceSource.for_env(env, apply_fn, unroll_length=T, batch_size=B,
@@ -369,7 +417,7 @@ def test_final_checkpoint_captures_live_source_state(tmp_path):
 
 
 def _train_cmd(ckpt_dir, extra=()):
-    return [sys.executable, "-m", "repro.launch.train", "--mode", "rl-agent",
+    return ["-m", "repro.launch.train", "--mode", "rl-agent",
             "--env", "catch", "--batch", "8", "--steps", "10",
             "--mesh-data", "2", "--replay", "elite",
             "--replay-capacity", "32", "--checkpoint-dir", ckpt_dir,
@@ -377,47 +425,17 @@ def _train_cmd(ckpt_dir, extra=()):
 
 
 def test_mesh2_elite_sigkill_resume_bit_exact(tmp_path):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = (os.path.join(_REPO, "src")
-                         + os.pathsep + env.get("PYTHONPATH", ""))
-    env["JAX_PLATFORMS"] = "cpu"
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "").replace(
-        "--xla_force_host_platform_device_count=8", "")
-        + " --xla_force_host_platform_device_count=2")
     dir_a, dir_b = str(tmp_path / "a"), str(tmp_path / "b")
 
     # leg A: uninterrupted
-    proc = subprocess.run(_train_cmd(dir_a), env=env, capture_output=True,
-                          text=True, timeout=600)
-    assert proc.returncode == 0, proc.stdout + proc.stderr
+    run_forced(_train_cmd(dir_a), devices=2)
 
-    # leg B: SIGKILL once the step-3 boundary checkpoint lands, then prune
-    # anything later so the resume provably starts from mid-run state
-    # (if the run outraces the kill, pruning still leaves a genuine
-    # boundary checkpoint — the kill adds realism, not correctness).
-    p = subprocess.Popen(_train_cmd(dir_b, ["--checkpoint-every", "3"]),
-                         env=env, stdout=subprocess.DEVNULL,
-                         stderr=subprocess.DEVNULL)
-    try:
-        deadline = time.time() + 540
-        while time.time() < deadline and p.poll() is None:
-            if os.path.exists(os.path.join(dir_b, "step_3.npz")):
-                p.send_signal(signal.SIGKILL)
-                break
-            time.sleep(0.05)
-        p.wait(timeout=60)
-    finally:
-        if p.poll() is None:
-            p.kill()
-    assert os.path.exists(os.path.join(dir_b, "step_3.npz"))
-    for f in glob.glob(os.path.join(dir_b, "step_*.npz")):
-        if int(os.path.basename(f)[5:-4]) > 3:
-            os.remove(f)
+    # leg B: SIGKILL once the step-3 boundary checkpoint lands
+    sigkill_at_boundary(_train_cmd(dir_b, ["--checkpoint-every", "3"]),
+                        dir_b, 3, devices=2)
 
     # leg C: resume to the same horizon
-    proc = subprocess.run(_train_cmd(dir_b, ["--resume"]), env=env,
-                          capture_output=True, text=True, timeout=600)
-    assert proc.returncode == 0, proc.stdout + proc.stderr
+    proc = run_forced(_train_cmd(dir_b, ["--resume"]), devices=2)
     assert "source state restored" in proc.stdout
 
     # replay occupancy + non-default priorities survived into the resume

@@ -15,8 +15,6 @@ on the same batches, and ShardedDeviceSource round-trips check_rollout.
 """
 
 import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +22,7 @@ import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec
 
+from conftest import run_forced
 from repro.configs.atari_impala import small_train
 from repro.core import learner as learner_lib
 from repro.core.runtime import Runtime
@@ -36,7 +35,6 @@ from repro.models.convnet import init_agent, minatar_net
 from repro.optim import make_optimizer
 
 T, B = 10, 8
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _agent():
@@ -193,13 +191,10 @@ def test_vtrace_kernel_impl_matches_scan_logprob_path():
 
 # ---------------------------------------------------------------------------
 # mesh 1 vs N parity + sharded contract (8 forced host devices, hermetic
-# subprocess so it passes in the single-device tier-1 env too)
+# subprocess — conftest.run_forced — so it passes in the single-device
+# tier-1 env too)
 
 _PARITY_SCRIPT = r"""
-import os
-os.environ["JAX_PLATFORMS"] = "cpu"
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=8")
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
@@ -318,13 +313,7 @@ print("PARITY OK")
 
 
 def test_sharded_parity_mesh_1_vs_4_subprocess():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = (os.path.join(_REPO, "src")
-                         + os.pathsep + env.get("PYTHONPATH", ""))
-    env.pop("XLA_FLAGS", None)  # the script forces its own device count
-    proc = subprocess.run([sys.executable, "-c", _PARITY_SCRIPT], env=env,
-                          capture_output=True, text=True, timeout=600)
-    assert proc.returncode == 0, proc.stdout + proc.stderr
+    proc = run_forced(script=_PARITY_SCRIPT, devices=8)
     assert "PARITY OK" in proc.stdout
 
 
