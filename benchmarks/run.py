@@ -18,6 +18,8 @@ Paper analogues:
                       elite at a 1:1 replay ratio, and gridworld return at
                       a fixed frame budget.
   attention         — chunked-vs-dense attention latency (model path).
+  kernels           — xla vs Pallas kernel per hot-path op (flash/decode/
+                      ssd/vtrace) with achieved-vs-roofline accounting.
   dynamic_batcher   — batching overhead per request.
   generate          — serving decode throughput (tokens/s).
   roofline_table    — re-prints the dry-run roofline terms per (arch, shape)
@@ -71,8 +73,7 @@ def bench_vtrace():
     us = timeit(lambda: jax.block_until_ready(f(*args)))
     row("vtrace_scan_T80_B256", us, f"{t*b/us:.1f}steps/us")
 
-    g = jax.jit(lambda *a: ops.vtrace_from_importance_weights_kernel(
-        *a, interpret=True))
+    g = jax.jit(ops.vtrace_from_importance_weights_kernel)
     us = timeit(lambda: jax.block_until_ready(g(*args)), n=3)
     row("vtrace_pallas_interp_T80_B256", us, "interpret-mode")
 
@@ -476,9 +477,84 @@ def bench_ssd_chunk():
     f = jax.jit(lambda *a: ref.ref_ssd_chunk(*a))
     us = timeit(lambda: jax.block_until_ready(f(c, b, x, da, h)[0]), n=10)
     row("ssd_chunk_jnp_BH8_L128", us, "")
-    g = jax.jit(lambda *a: ops.ssd_chunk(*a, interpret=True))
+    g = jax.jit(lambda *a: ops.ssd_chunk(*a))
     us = timeit(lambda: jax.block_until_ready(g(c, b, x, da, h)[0]), n=3)
     row("ssd_chunk_pallas_interp", us, "interpret-mode")
+
+
+def bench_kernels():
+    """xla reference vs Pallas kernel per hot-path op (flash attention,
+    decode attention, SSD chunk, V-trace) at a small and a paper-ish shape,
+    with achieved-vs-roofline accounting from
+    ``launch.roofline.kernel_roofline`` at the measured dims. On CPU the
+    kernels execute in interpret mode (see kernels/compat.py), so
+    ``of_roofline`` documents interpreter overhead only; on a TPU the same
+    rows measure real kernel efficiency against the analytic roofline."""
+    from repro.core.vtrace import vtrace_from_importance_weights
+    from repro.kernels import ops, ref
+    from repro.launch.roofline import kernel_roofline
+
+    rng = np.random.default_rng(0)
+
+    def norm(*shape):
+        return jnp.asarray(rng.normal(0, 1, shape), jnp.float32)
+
+    def versus(name, ref_call, kern_call, kern, dims, n_ref=10, n_kern=2):
+        us_ref = timeit(lambda: jax.block_until_ready(ref_call()), n=n_ref)
+        row(f"{name}_xla", us_ref, "")
+        us_k = timeit(lambda: jax.block_until_ready(kern_call()), n=n_kern,
+                      warmup=1)
+        r = kernel_roofline(kern, dtype_bytes=4, **dims)
+        row(f"{name}_kernel", us_k,
+            f"vs_xla={us_ref / us_k:.3f}x "
+            f"roofline_us={r['roofline_s'] * 1e6:.2f} "
+            f"of_roofline={100 * r['roofline_s'] * 1e6 / us_k:.3f}% "
+            f"bound={r['bound']}")
+
+    s_big = 256 if SMALL else 2048
+    for tag, b, h, kh, s, hd in (("small", 2, 4, 2, 128, 32),
+                                 ("paperish", 1, 8, 4, s_big, 64)):
+        q, k, v = norm(b, h, s, hd), norm(b, kh, s, hd), norm(b, kh, s, hd)
+        blk = min(128, s)
+        fx = jax.jit(lambda q, k, v: ref.ref_flash_attention(q, k, v))
+        fk = jax.jit(lambda q, k, v: ops.flash_attention(
+            q, k, v, block_q=blk, block_k=blk))
+        versus(f"flash_{tag}_S{s}", lambda: fx(q, k, v),
+               lambda: fk(q, k, v), "flash_attention",
+               dict(b=b, h=h, kh=kh, s=s, hd=hd, window=0))
+
+    cap_big = 512 if SMALL else 4096
+    for tag, b, h, kh, cap, hd in (("small", 8, 4, 2, 128, 32),
+                                   ("paperish", 32, 8, 4, cap_big, 64)):
+        q, k, v = norm(b, h, hd), norm(b, kh, cap, hd), norm(b, kh, cap, hd)
+        slot = jnp.arange(cap, dtype=jnp.int32)
+        pos = jnp.int32(cap - 1)
+        dx = jax.jit(lambda q, k, v: ref.ref_decode_attention(
+            q, k, v, slot, pos))
+        dk = jax.jit(lambda q, k, v: ops.decode_attention(
+            q, k, v, slot, pos, block_k=min(128, cap)))
+        versus(f"decode_{tag}_T{cap}", lambda: dx(q, k, v),
+               lambda: dk(q, k, v), "decode_attention",
+               dict(b=b, h=h, kh=kh, s=cap, hd=hd), n_kern=3)
+
+    for tag, bh, l, n, p in (("small", 4, 64, 32, 32),
+                             ("paperish", 8 if SMALL else 64,
+                              128 if SMALL else 256, 64, 64)):
+        c, bm, x = norm(bh, l, n), norm(bh, l, n), norm(bh, l, p)
+        da = jnp.asarray(-rng.random((bh, l, 1)) * 0.1, jnp.float32)
+        hp = norm(bh, p, n)
+        sx = jax.jit(ref.ref_ssd_chunk)
+        sk = jax.jit(lambda *a: ops.ssd_chunk(*a))
+        versus(f"ssd_{tag}_L{l}", lambda: sx(c, bm, x, da, hp)[0],
+               lambda: sk(c, bm, x, da, hp)[0], "ssd_chunk",
+               dict(bh=bh, l=l, n=n, p=p))
+
+    t, b = 80, 256
+    args = [norm(t, b) for _ in range(4)] + [norm(b)]
+    vx = jax.jit(vtrace_from_importance_weights)
+    vk = jax.jit(ops.vtrace_from_importance_weights_kernel)
+    versus(f"vtrace_T{t}_B{b}", lambda: vx(*args), lambda: vk(*args),
+           "vtrace", dict(t=t, b=b), n_kern=3)
 
 
 def roofline_table():
@@ -515,6 +591,7 @@ _SUITES = {
     "attention": bench_attention,
     "generate": bench_generate,
     "ssd": bench_ssd_chunk,
+    "kernels": bench_kernels,
     "roofline": roofline_table,
 }
 

@@ -79,8 +79,11 @@ class ModelConfig:
 
     # --- numerics / impl ---------------------------------------------------------
     dtype: str = "bfloat16"
-    attn_impl: str = "auto"             # auto | xla | xla_chunked | pallas
+    # auto | xla | xla_chunked | xla_chunked_skip | kernel
+    # ("pallas" is the legacy spelling of "kernel")
+    attn_impl: str = "auto"
     attn_chunk: int = 1024
+    ssd_impl: str = "xla"               # xla | kernel (mamba chunk scan)
     remat: bool = True
     # serving adaptation for long_500k on pure full-attention archs (see DESIGN.md)
     long_context_window: int = 8192

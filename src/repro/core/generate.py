@@ -19,10 +19,12 @@ from repro.models import model as model_lib
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "num_steps",
-                                             "temperature"))
+                                             "temperature", "attn_impl"))
 def generate(params, prompt, key, *, cfg, num_steps: int,
-             temperature: float = 1.0, vision=None):
-    """prompt: (B, P) int32. Returns dict:
+             temperature: float = 1.0, vision=None, attn_impl=None):
+    """prompt: (B, P) int32. attn_impl: attention impl for BOTH prefill
+    and decode (None -> cfg.attn_impl; 'kernel' = Pallas flash kernel for
+    the prefill, Pallas decode-attention kernel per step). Returns dict:
       tokens    (B, P + num_steps)
       logprob   (B, num_steps)  behavior log-prob of each sampled token
       entropy   (B, num_steps)  policy entropy at each step
@@ -31,7 +33,8 @@ def generate(params, prompt, key, *, cfg, num_steps: int,
     b, p = prompt.shape
     total = p + num_steps
     hidden, _, cache = model_lib.prefill(params, prompt, cfg=cfg,
-                                         vision=vision, cache_seq_len=total)
+                                         vision=vision, impl=attn_impl,
+                                         cache_seq_len=total)
     logits0 = model_lib.logits_from_hidden(params, cfg, hidden[:, -1:])
     base0 = model_lib.baseline_from_hidden(params, cfg, hidden[:, -1:])
 
@@ -49,7 +52,7 @@ def generate(params, prompt, key, *, cfg, num_steps: int,
     def step(carry, key):
         cache, tok, lp, ent, base, pos = carry
         logits, baseline, cache = model_lib.serve_step(
-            params, tok[:, None], cache, pos, cfg=cfg)
+            params, tok[:, None], cache, pos, cfg=cfg, impl=attn_impl)
         ntok, nlp, nent = sample(key, logits[:, 0])
         out = {"token": tok, "logprob": lp, "entropy": ent,
                "baseline": base}

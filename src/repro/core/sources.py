@@ -772,7 +772,7 @@ class GeneratorSource:
 
     def __init__(self, cfg, *, batch_size: int, episode_length: int, key,
                  reward_fn: Optional[Callable] = None,
-                 temperature: float = 1.0):
+                 temperature: float = 1.0, attn_impl=None):
         self._cfg = cfg
         self.batch_size = batch_size
         self.episode_length = episode_length
@@ -781,6 +781,7 @@ class GeneratorSource:
         self._reward_fn = reward_fn or (
             lambda toks: token_task_reward(toks, cfg.vocab_size))
         self._temperature = temperature
+        self._attn_impl = attn_impl
 
     def start(self, params) -> None:
         del params
@@ -792,7 +793,8 @@ class GeneratorSource:
         prompt = jax.random.randint(k_prompt, (b, 1), 0,
                                     self._cfg.vocab_size)
         ep = gen_lib.generate(params, prompt, k_gen, cfg=self._cfg,
-                              num_steps=t, temperature=self._temperature)
+                              num_steps=t, temperature=self._temperature,
+                              attn_impl=self._attn_impl)
         tokens = ep["tokens"]                                  # (B, T+1)
         reward = self._reward_fn(tokens)                       # (B, T)
         done = jnp.zeros((b, t), bool).at[:, -1].set(True)

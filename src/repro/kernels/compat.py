@@ -1,7 +1,36 @@
-"""Pallas-TPU API compatibility across jax versions."""
+"""Pallas-TPU API compatibility across jax versions and backends."""
 
+import warnings
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 # Renamed TPUCompilerParams -> CompilerParams after jax 0.4.x.
 CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
+
+_warned = False
+
+
+def resolve_interpret(interpret=None):
+    """Resolve a caller's ``interpret=`` request against the backend.
+
+    ``None`` (the default everywhere) auto-selects: compiled on TPU,
+    interpret mode elsewhere — the kernels target Mosaic-TPU, and
+    interpret mode executes the same kernel body under the CPU/GPU
+    backend so the ``kernel`` impls stay runnable (and parity-testable)
+    in CI. The fallback warns ONCE per process; callers no longer plumb
+    ``interpret=`` flags by hand.
+    """
+    global _warned
+    if interpret is not None:
+        return interpret
+    if jax.default_backend() == "tpu":
+        return False
+    if not _warned:
+        _warned = True
+        warnings.warn(
+            "Pallas kernels: no TPU backend detected "
+            f"({jax.default_backend()}); running in interpret mode "
+            "(slow, validation only).", stacklevel=2)
+    return True

@@ -22,8 +22,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
-
-NEG_INF = -2.0e38
+from repro.kernels.ops import NEG_INF
 
 
 def _kernel(pos_ref, q_ref, k_ref, v_ref, slot_ref, o_ref,

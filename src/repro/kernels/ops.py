@@ -1,7 +1,8 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True on CPU (validation mode) and False on TPU —
-the kernels are written for the TPU target; interpret mode executes the
+``interpret`` defaults to compiled on TPU and interpret mode elsewhere
+(one process-wide warning) via :func:`repro.kernels.compat.resolve_interpret`
+— the kernels are written for the TPU target; interpret mode executes the
 kernel body for correctness checking in this container (DESIGN.md §8.5).
 """
 
@@ -10,40 +11,40 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import decode_attention as _dec
-from repro.kernels import flash_attention as _fa
-from repro.kernels import ssd_chunk as _ssd
-from repro.kernels import vtrace as _vt
+# The shared fp32 mask constant for every masked-attention path — the model
+# (models/attention.py) and the flash/decode kernels must agree on it or
+# XLA-vs-kernel parity drifts on fully-masked rows. It MUST be defined
+# before the kernel submodule imports below: the submodules import it back
+# from this (then partially-initialised) module.
+NEG_INF = -2.0e38
 
-
-def _default_interpret():
-    return jax.default_backend() != "tpu"
+from repro.kernels import decode_attention as _dec  # noqa: E402
+from repro.kernels import flash_attention as _fa  # noqa: E402
+from repro.kernels import ref as _ref  # noqa: E402
+from repro.kernels import ssd_chunk as _ssd  # noqa: E402
+from repro.kernels import vtrace as _vt  # noqa: E402
+from repro.kernels.compat import resolve_interpret  # noqa: E402
 
 
 def flash_attention(q, k, v, *, scale=None, causal=True, window=0,
                     softcap=0.0, block_q=128, block_k=128, interpret=None):
-    if interpret is None:
-        interpret = _default_interpret()
     return _fa.flash_attention(q, k, v, scale=scale, causal=causal,
                                window=window, softcap=softcap,
                                block_q=block_q, block_k=block_k,
-                               interpret=interpret)
+                               interpret=resolve_interpret(interpret))
 
 
 def decode_attention(q, k, v, slot_pos, pos, *, scale=None, softcap=0.0,
                      window=0, block_k=128, interpret=None):
-    if interpret is None:
-        interpret = _default_interpret()
     return _dec.decode_attention(q, k, v, slot_pos, pos, scale=scale,
                                  softcap=softcap, window=window,
-                                 block_k=block_k, interpret=interpret)
+                                 block_k=block_k,
+                                 interpret=resolve_interpret(interpret))
 
 
 def vtrace_acc(deltas, dcs, *, block_b=128, interpret=None):
-    if interpret is None:
-        interpret = _default_interpret()
     return _vt.vtrace_scan(deltas, dcs, block_b=block_b,
-                           interpret=interpret)
+                           interpret=resolve_interpret(interpret))
 
 
 def vtrace_from_importance_weights_kernel(
@@ -76,6 +77,25 @@ def vtrace_from_importance_weights_kernel(
 
 
 def ssd_chunk(c, b, xdt, da, h_prev, *, interpret=None):
-    if interpret is None:
-        interpret = _default_interpret()
-    return _ssd.ssd_chunk(c, b, xdt, da, h_prev, interpret=interpret)
+    return _ssd.ssd_chunk(c, b, xdt, da, h_prev,
+                          interpret=resolve_interpret(interpret))
+
+
+def ssd_chunk_trainable(c, b, xdt, da, h_prev, *, interpret=None):
+    """``ssd_chunk`` with a custom VJP: Pallas kernel on the forward, VJP
+    of the jnp reference on the backward (Pallas TPU kernels are not
+    reverse-mode differentiable; the reference recomputes the chunk —
+    flash-style rematerialisation)."""
+
+    @jax.custom_vjp
+    def run(c, b, xdt, da, h_prev):
+        return ssd_chunk(c, b, xdt, da, h_prev, interpret=interpret)
+
+    def fwd(c, b, xdt, da, h_prev):
+        return run(c, b, xdt, da, h_prev), (c, b, xdt, da, h_prev)
+
+    def bwd(res, g):
+        return jax.vjp(_ref.ref_ssd_chunk, *res)[1](g)
+
+    run.defvjp(fwd, bwd)
+    return run(c, b, xdt, da, h_prev)

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -2.0e38
+from repro.kernels.ops import NEG_INF
 
 
 def ref_flash_attention(q, k, v, *, scale=None, causal=True, window=0,

@@ -130,9 +130,11 @@ def _analyze(compiled):
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool, rules_name: str,
-            out_dir: str, verbose: bool = True, with_block: bool = True):
+            out_dir: str, verbose: bool = True, with_block: bool = True,
+            attn_impl=None, ssd_impl=None):
     from repro.launch.roofline import (build_block_program,
-                                       inner_scan_corrections)
+                                       inner_scan_corrections,
+                                       kernel_rooflines)
     mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
     rules_name = resolve_rules(rules_name, shape_name, arch)
     rules = RULE_SETS[rules_name]
@@ -142,7 +144,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, rules_name: str,
 
     t0 = time.time()
     step_fn, args, cfg, jit_kwargs = build_program(arch, shape_name, mesh,
-                                                   rules)
+                                                   rules, attn_impl=attn_impl,
+                                                   ssd_impl=ssd_impl)
     with mesh:
         lowered = jax.jit(step_fn, **jit_kwargs).lower(*args)
         t_lower = time.time() - t0
@@ -211,6 +214,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, rules_name: str,
                              if flops_dev_c else 0.0),
         },
         "params": cfg.param_count(),
+        # analytic per-kernel rooflines for this (arch, shape): what each
+        # Pallas kernel SHOULD cost on one chip — the achieved-vs-roofline
+        # denominator benchmarks/run.py --suite kernels measures against.
+        "kernel_rooflines": kernel_rooflines(cfg, shape_name),
     }
 
     if out_dir:
@@ -243,6 +250,13 @@ def main(argv=None):
     p.add_argument("--multi-pod", action="store_true")
     p.add_argument("--rules", choices=["auto"] + list(RULE_SETS),
                    default="auto")
+    p.add_argument("--attn-impl", default=None,
+                   choices=["xla", "xla_chunked", "xla_chunked_skip",
+                            "kernel"],
+                   help="attention impl for the lowered programs "
+                        "(default: the memory-bounded xla_chunked)")
+    p.add_argument("--ssd-impl", default=None, choices=["xla", "kernel"],
+                   help="Mamba2 chunk-scan impl for the lowered programs")
     p.add_argument("--out", default="experiments/dryrun")
     args = p.parse_args(argv)
 
@@ -259,7 +273,8 @@ def main(argv=None):
     for arch, shape in pairs:
         try:
             run_one(arch, shape, multi_pod=args.multi_pod,
-                    rules_name=args.rules, out_dir=args.out)
+                    rules_name=args.rules, out_dir=args.out,
+                    attn_impl=args.attn_impl, ssd_impl=args.ssd_impl)
         except Exception as e:  # noqa: BLE001
             failures.append((arch, shape, repr(e)))
             print(f"[{arch} | {shape}] FAILED: {e}", flush=True)

@@ -211,7 +211,8 @@ def inner_scan_corrections(cfg: ModelConfig, shape_name: str,
     if cfg.shared_attn_every:
         n_attn += cfg.num_groups
 
-    if cfg.attn_impl in ("xla_chunked", "xla_chunked_skip", "pallas"):
+    if cfg.attn_impl in ("xla_chunked", "xla_chunked_skip", "kernel",
+                         "pallas"):
         cq = min(cfg.attn_chunk, s)
         nq = s // cq
         nkv = nq
@@ -259,4 +260,122 @@ def inner_scan_corrections(cfg: ModelConfig, shape_name: str,
         mult = 3.0 if kind == "train" else 1.0
         out["slstm_steps"] = n_slstm * (s - 1) * per_step * mult
 
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-kernel rooflines (analytic FLOPs/bytes for one kernel invocation)
+# ---------------------------------------------------------------------------
+
+def kernel_roofline(kernel: str, *, dtype_bytes: int = 2,
+                    **dims) -> Dict[str, float]:
+    """Analytic single-chip roofline for ONE invocation of a Pallas kernel.
+
+    FLOPs count the matmul terms (2 per multiply-add; softmax/exp
+    elementwise terms are <3% and omitted); bytes are the MINIMAL HBM
+    traffic — each operand read once, each output written once — i.e. the
+    perfectly-blocked ideal the kernels aim for. ``roofline_s`` is the
+    achievable lower bound on one v5e chip (mesh.PEAK_FLOPS_BF16 /
+    mesh.HBM_BW); benchmarks/run.py --suite kernels reports
+    measured_s / roofline_s as the achieved-vs-roofline ratio.
+
+    Dims per kernel:
+      flash_attention   b, h, kh, s, hd [, window, causal=True]
+      decode_attention  b, h, kh, s, hd
+      ssd_chunk         bh, l, n, p
+      vtrace            t, b
+    """
+    from repro.launch import mesh as mesh_lib
+    if kernel == "flash_attention":
+        b, h, kh = dims["b"], dims["h"], dims["kh"]
+        s, hd = dims["s"], dims["hd"]
+        window = dims.get("window", 0)
+        # visited (q, kv) pairs: causal halves the square; a sliding
+        # window caps each query's kv span
+        s_eff = min(window, s) if window else (s + 1) / 2.0
+        if not dims.get("causal", True):
+            s_eff = s
+        flops = 4.0 * b * h * s * s_eff * hd           # qk^T + pv
+        bytes_ = dtype_bytes * (2 * b * h * s * hd      # q + o
+                                + 2 * b * kh * s * hd)  # k + v (unexpanded)
+    elif kernel == "decode_attention":
+        b, h, kh = dims["b"], dims["h"], dims["kh"]
+        s, hd = dims["s"], dims["hd"]
+        flops = 4.0 * b * h * s * hd
+        bytes_ = dtype_bytes * (2 * b * kh * s * hd     # streamed k + v
+                                + 2 * b * h * hd)       # q + o
+    elif kernel == "ssd_chunk":
+        bh, L, n, p = dims["bh"], dims["l"], dims["n"], dims["p"]
+        # G = C B^T (2L^2n); y_diag = (G.decay) X (2L^2p);
+        # state update + y_off (2Lnp each)
+        flops = bh * (2.0 * L * L * (n + p) + 4.0 * L * n * p)
+        bytes_ = dtype_bytes * bh * (2 * L * n + 2 * L * p + 2 * p * n + L)
+    elif kernel == "vtrace":
+        t, b = dims["t"], dims["b"]
+        flops = 3.0 * t * b                             # one fma + mul per cell
+        bytes_ = 4 * 3 * t * b                          # deltas, dcs, out fp32
+    else:
+        raise ValueError(f"unknown kernel {kernel}")
+    compute_s = flops / mesh_lib.PEAK_FLOPS_BF16
+    memory_s = bytes_ / mesh_lib.HBM_BW
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "intensity": flops / bytes_ if bytes_ else 0.0,
+        "roofline_s": max(compute_s, memory_s),
+        "bound": "compute" if compute_s >= memory_s else "memory",
+    }
+
+
+def kernel_rooflines(cfg: ModelConfig, shape_name: str) -> Dict[str, Dict]:
+    """Per-arch kernel roofline table: for every Pallas kernel with a hot
+    path in this (cfg, input-shape), the analytic single-invocation
+    roofline plus how many invocations one step performs
+    (``calls_per_step`` = layers x inner chunks). Archs without the mixer
+    simply omit the kernel."""
+    ishape = INPUT_SHAPES[shape_name]
+    b, s = ishape.global_batch, ishape.seq_len
+    kind = ishape.kind
+    dtype_bytes = jnp.dtype(cfg.dtype).itemsize
+    hd = cfg.resolved_head_dim
+
+    n_attn = sum(1 for m, _ in cfg.block_pattern
+                 if m in ("attn", "local_attn", "swa_attn")) * cfg.num_groups
+    if cfg.shared_attn_every:
+        n_attn += cfg.num_groups
+    n_mamba = sum(1 for m, _ in cfg.block_pattern
+                  if m == "mamba") * cfg.num_groups
+
+    out: Dict[str, Dict] = {}
+    if n_attn:
+        if kind == "decode":
+            rl = kernel_roofline("decode_attention", dtype_bytes=dtype_bytes,
+                                 b=b, h=cfg.num_heads, kh=cfg.num_kv_heads,
+                                 s=s, hd=hd)
+            rl["calls_per_step"] = n_attn
+            out["decode_attention"] = rl
+        else:
+            rl = kernel_roofline("flash_attention", dtype_bytes=dtype_bytes,
+                                 b=b, h=cfg.num_heads, kh=cfg.num_kv_heads,
+                                 s=s, hd=hd,
+                                 window=(cfg.sliding_window if all(
+                                     m in ("swa_attn", "local_attn")
+                                     for m, _ in cfg.block_pattern
+                                     if m.endswith("attn")) else 0))
+            rl["calls_per_step"] = n_attn * (3 if kind == "train" else 1)
+            out["flash_attention"] = rl
+    if n_mamba and kind != "decode":
+        d_in = cfg.ssm_expand * cfg.d_model
+        nh = d_in // cfg.ssm_head_dim
+        L = min(cfg.ssm_chunk, s)
+        rl = kernel_roofline("ssd_chunk", dtype_bytes=4,  # fp32 state math
+                             bh=b * nh, l=L, n=cfg.ssm_state,
+                             p=cfg.ssm_head_dim)
+        rl["calls_per_step"] = n_mamba * (s // L) * (3 if kind == "train"
+                                                     else 1)
+        out["ssd_chunk"] = rl
+    if kind == "train":
+        rl = kernel_roofline("vtrace", t=s, b=b)
+        rl["calls_per_step"] = 1
+        out["vtrace"] = rl
     return out

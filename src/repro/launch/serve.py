@@ -27,10 +27,11 @@ from repro.models import model as model_lib
 
 class Server:
     def __init__(self, cfg, params, *, gen_tokens: int, max_batch: int = 8,
-                 timeout_ms: float = 5.0):
+                 timeout_ms: float = 5.0, attn_impl=None):
         self.cfg = cfg
         self.params = params
         self.gen_tokens = gen_tokens
+        self.attn_impl = attn_impl
         self.batcher = DynamicBatcher(max_batch_size=max_batch,
                                       timeout_ms=timeout_ms)
         self._key = jax.random.PRNGKey(0)
@@ -60,7 +61,8 @@ class Server:
             prompts, respond, n = got
             self._key, k = jax.random.split(self._key)
             out = gen_lib.generate(self.params, jnp.asarray(prompts), k,
-                                   cfg=self.cfg, num_steps=self.gen_tokens)
+                                   cfg=self.cfg, num_steps=self.gen_tokens,
+                                   attn_impl=self.attn_impl)
             respond(np.asarray(out["tokens"]))
             self.served += n
             self.batches += 1
@@ -74,12 +76,18 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=15)
     p.add_argument("--gen-tokens", type=int, default=16)
     p.add_argument("--max-batch", type=int, default=8)
+    p.add_argument("--attn-impl", default=None,
+                   choices=["xla", "xla_chunked", "xla_chunked_skip",
+                            "kernel"],
+                   help="'kernel': Pallas flash kernel for prefill + "
+                        "decode-attention kernel per generated token "
+                        "(interpret-mode on CPU)")
     args = p.parse_args(argv)
 
     cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
     params, _ = model_lib.init(jax.random.PRNGKey(0), cfg)
     server = Server(cfg, params, gen_tokens=args.gen_tokens,
-                    max_batch=args.max_batch)
+                    max_batch=args.max_batch, attn_impl=args.attn_impl)
     server.start()
 
     results = {}

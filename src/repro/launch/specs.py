@@ -39,10 +39,13 @@ def _shape(shape) :
     return shape if isinstance(shape, InputShape) else INPUT_SHAPES[shape]
 
 
-def resolve_config(arch: str, shape_name, base_cfg=None) -> ModelConfig:
+def resolve_config(arch: str, shape_name, base_cfg=None, attn_impl=None,
+                   ssd_impl=None) -> ModelConfig:
     """Arch config, specialised to the input shape where required.
     ``shape_name`` may be a name or an InputShape; ``base_cfg`` overrides the
-    registry lookup (reduced-config integration tests)."""
+    registry lookup (reduced-config integration tests). ``attn_impl`` /
+    ``ssd_impl`` override the impl context (dryrun --attn-impl/--ssd-impl);
+    the default stays the memory-bounded chunked path."""
     shape = _shape(shape_name)
     shape_name = shape.name
     cfg = base_cfg if base_cfg is not None else get_config(arch)
@@ -60,7 +63,9 @@ def resolve_config(arch: str, shape_name, base_cfg=None) -> ModelConfig:
     # checkpointed), so no (S,S) scores or per-iteration softmax residuals
     # are ever resident. FLOPs hidden inside the chunk loops are restored
     # by roofline.inner_scan_corrections.
-    cfg = dataclasses.replace(cfg, attn_impl="xla_chunked")
+    cfg = dataclasses.replace(cfg, attn_impl=attn_impl or "xla_chunked")
+    if ssd_impl:
+        cfg = dataclasses.replace(cfg, ssd_impl=ssd_impl)
     return cfg
 
 
@@ -132,9 +137,10 @@ def cache_specs(cfg: ModelConfig, mesh, batch: int, seq_len: int):
 # ---------------------------------------------------------------------------
 
 def build_train(arch: str, shape_name, mesh, rules,
-                train_cfg: TrainConfig | None = None, base_cfg=None):
+                train_cfg: TrainConfig | None = None, base_cfg=None,
+                attn_impl=None, ssd_impl=None):
     """IMPALA LM learner step + input specs for a train shape."""
-    cfg = resolve_config(arch, shape_name, base_cfg)
+    cfg = resolve_config(arch, shape_name, base_cfg, attn_impl, ssd_impl)
     ishape = _shape(shape_name)
     train_cfg = train_cfg or TrainConfig()
     opt = make_optimizer(train_cfg)
@@ -193,8 +199,9 @@ def build_train(arch: str, shape_name, mesh, rules,
     return wrapped, (params, opt_state, step, batch), cfg, jit_kwargs
 
 
-def build_prefill(arch: str, shape_name, mesh, rules, base_cfg=None):
-    cfg = resolve_config(arch, shape_name, base_cfg)
+def build_prefill(arch: str, shape_name, mesh, rules, base_cfg=None,
+                  attn_impl=None, ssd_impl=None):
+    cfg = resolve_config(arch, shape_name, base_cfg, attn_impl, ssd_impl)
     ishape = _shape(shape_name)
     b, s = ishape.global_batch, ishape.seq_len
     params, _ = abstract_params(cfg, mesh, rules)
@@ -222,8 +229,9 @@ def build_prefill(arch: str, shape_name, mesh, rules, base_cfg=None):
     return prefill_step, tuple(args), cfg, {"out_shardings": out_shardings}
 
 
-def build_decode(arch: str, shape_name, mesh, rules, base_cfg=None):
-    cfg = resolve_config(arch, shape_name, base_cfg)
+def build_decode(arch: str, shape_name, mesh, rules, base_cfg=None,
+                 attn_impl=None, ssd_impl=None):
+    cfg = resolve_config(arch, shape_name, base_cfg, attn_impl, ssd_impl)
     ishape = _shape(shape_name)
     b, s = ishape.global_batch, ishape.seq_len
     params, _ = abstract_params(cfg, mesh, rules)
@@ -249,11 +257,15 @@ def build_decode(arch: str, shape_name, mesh, rules, base_cfg=None):
     return serve_step, (params, tokens, cache, pos), cfg, jit_kwargs
 
 
-def build_program(arch: str, shape_name, mesh, rules, base_cfg=None):
+def build_program(arch: str, shape_name, mesh, rules, base_cfg=None,
+                  attn_impl=None, ssd_impl=None):
     kind = _shape(shape_name).kind
     if kind == "train":
-        return build_train(arch, shape_name, mesh, rules, base_cfg=base_cfg)
+        return build_train(arch, shape_name, mesh, rules, base_cfg=base_cfg,
+                           attn_impl=attn_impl, ssd_impl=ssd_impl)
     if kind == "prefill":
         return build_prefill(arch, shape_name, mesh, rules,
-                             base_cfg=base_cfg)
-    return build_decode(arch, shape_name, mesh, rules, base_cfg=base_cfg)
+                             base_cfg=base_cfg, attn_impl=attn_impl,
+                             ssd_impl=ssd_impl)
+    return build_decode(arch, shape_name, mesh, rules, base_cfg=base_cfg,
+                        attn_impl=attn_impl, ssd_impl=ssd_impl)

@@ -152,8 +152,21 @@ def _restore_shardings(params, opt_state):
             "opt_state": jax.tree.map(lambda x: x.sharding, opt_state)}
 
 
+def _apply_impls(cfg, args):
+    """Fold --attn-impl / --ssd-impl into the model config (the single
+    context every downstream path reads, mirroring --vtrace-impl)."""
+    import dataclasses
+    over = {}
+    if args.attn_impl:
+        over["attn_impl"] = args.attn_impl
+    if args.ssd_impl:
+        over["ssd_impl"] = args.ssd_impl
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
 def build_lm_rl(args):
-    cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
+    cfg = _apply_impls(
+        (get_reduced_config if args.reduced else get_config)(args.arch), args)
     train_cfg = TrainConfig(optimizer="adamw", learning_rate=args.lr or 3e-4,
                             grad_clip=1.0, total_steps=args.steps,
                             lr_schedule="constant", entropy_cost=0.003)
@@ -163,11 +176,12 @@ def build_lm_rl(args):
     opt_state = opt.init(params)   # zeros_like inherits the param shardings
     source = sources_lib.GeneratorSource(
         cfg, batch_size=args.batch or 16, episode_length=args.seq,
-        key=jax.random.PRNGKey(7))
+        key=jax.random.PRNGKey(7), attn_impl=args.attn_impl)
     step_fn = jax.jit(sources_lib.lm_rl_step_from_rollout(
         learner_lib.make_lm_train_step(cfg, opt, train_cfg,
                                        loss_chunk=args.seq,
                                        vtrace_impl=args.vtrace_impl,
+                                       attn_impl=args.attn_impl,
                                        grad_constraint=grad_constraint,
                                        mesh=mesh, rules=rules)))
     extras = {"log_keys": ("reward_per_step", "pg_loss", "entropy_loss")}
@@ -178,7 +192,8 @@ def build_lm_rl(args):
 
 def build_lm(args):
     from repro.data import PackedBatchIterator, markov_corpus
-    cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
+    cfg = _apply_impls(
+        (get_reduced_config if args.reduced else get_config)(args.arch), args)
     train_cfg = TrainConfig(optimizer="adamw", learning_rate=args.lr or 3e-4,
                             grad_clip=1.0, total_steps=args.steps,
                             lr_schedule="cosine", warmup_steps=10)
@@ -187,7 +202,7 @@ def build_lm(args):
     mesh, rules, params, grad_constraint = _lm_mesh_setup(args, params, axes)
     opt_state = opt.init(params)
     step_fn = jax.jit(learner_lib.make_lm_pretrain_step(
-        cfg, opt, loss_chunk=min(512, args.seq),
+        cfg, opt, loss_chunk=min(512, args.seq), attn_impl=args.attn_impl,
         grad_constraint=grad_constraint, mesh=mesh, rules=rules))
 
     b = args.batch or 16
@@ -262,6 +277,19 @@ def main(argv=None):
                    help="rl-agent/lm-rl: V-trace recursion — reverse-scan "
                         "reference or the Pallas TPU kernel "
                         "(interpret-mode on CPU); ignored by --mode lm")
+    p.add_argument("--attn-impl", default=None,
+                   choices=["xla", "xla_chunked", "xla_chunked_skip",
+                            "kernel"],
+                   help="lm/lm-rl: attention impl on every hot path — "
+                        "'kernel' selects the Pallas flash-attention "
+                        "kernel for train/prefill and the decode-attention "
+                        "kernel for generation (interpret-mode on CPU); "
+                        "default: the config's attn_impl ('auto')")
+    p.add_argument("--ssd-impl", default=None, choices=["xla", "kernel"],
+                   help="lm/lm-rl: Mamba2 chunked-scan impl — 'kernel' "
+                        "routes each SSD chunk to the Pallas kernel "
+                        "(skips the (L,L) decay-matrix materialisation); "
+                        "default: the config's ssd_impl ('xla')")
     p.add_argument("--resume", action="store_true",
                    help="restore {params, opt_state, step} AND the rollout "
                         "source state (env carries, RNG streams, replay "

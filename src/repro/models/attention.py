@@ -18,10 +18,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import NEG_INF  # shared fp32 mask constant
 from repro.models.common import (AxisParam, apply_rope, dense, param,
                                  rmsnorm, softcap)
-
-NEG_INF = -2.0e38  # fp32-safe mask value
 
 
 # ---------------------------------------------------------------------------
@@ -201,6 +200,62 @@ def _attend_chunked(q, k, v, q_pos, k_pos, scale, window, cap, causal,
     return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, heads, hd)
 
 
+def _divisor_block(s, want):
+    """Largest divisor of ``s`` that is <= ``want`` — the kernel grids
+    require the sequence to tile exactly, and CI shapes are not always
+    multiples of 128."""
+    b = max(min(want, s), 1)
+    while s % b:
+        b -= 1
+    return b
+
+
+def _attend_flash_kernel(q, k, v, q_pos, k_pos, *, scale, window, cap,
+                         chunk, group):
+    """Causal attention on the Pallas flash kernel.
+
+    Forward: kernels/flash_attention.py — GQA via the kernel's index maps
+    (the unexpanded (B,S,K,hd) k/v go straight in), sliding window and
+    softcap inside the kernel. Backward: VJP of the chunked
+    online-softmax reference (``_attend_chunked``, skip=True) — Pallas
+    TPU kernels are not reverse-mode differentiable, so the backward
+    rematerialises flash-style from the saved inputs; the GQA expansion
+    happens inside the differentiated reference so dk/dv sum back to K
+    heads. Positions are integer primals and get float0 cotangents.
+    """
+    from repro.kernels import ops as kops
+    bq = _divisor_block(q.shape[1], min(chunk, 128))
+    bk = _divisor_block(k.shape[1], min(chunk, 128))
+
+    @jax.custom_vjp
+    def attend(q, k, v, q_pos, k_pos):
+        o = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), scale=scale, causal=True,
+            window=window, softcap=cap or 0.0, block_q=bq, block_k=bk)
+        return o.transpose(0, 2, 1, 3)
+
+    def fwd(q, k, v, q_pos, k_pos):
+        return attend(q, k, v, q_pos, k_pos), (q, k, v, q_pos, k_pos)
+
+    def bwd(res, g):
+        q, k, v, q_pos, k_pos = res
+
+        def reference(q, k, v):
+            # skip=False: the skip variant's data-dependent fori_loop is
+            # not reverse-mode differentiable; the fixed-trip-count scan is.
+            ke, ve = _expand_kv(k, group), _expand_kv(v, group)
+            return _attend_chunked(q, ke, ve, q_pos, k_pos, scale, window,
+                                   cap, True, chunk, skip=False)
+
+        dq, dk, dv = jax.vjp(reference, q, k, v)[1](g)
+        zero = lambda a: np.zeros(a.shape, jax.dtypes.float0)  # noqa: E731
+        return dq, dk, dv, zero(q_pos), zero(k_pos)
+
+    attend.defvjp(fwd, bwd)
+    return attend(q, k, v, q_pos, k_pos)
+
+
 def attn_apply(params, x, *, cfg, kind, positions, kv_src=None,
                impl=None):
     """Full-sequence attention (training / prefill).
@@ -228,19 +283,16 @@ def attn_apply(params, x, *, cfg, kind, positions, kv_src=None,
     if impl == "xla":
         o = _attend_dense(q, ke, ve, positions, kv_pos, _scale(cfg), window,
                           cfg.attn_logit_softcap, causal)
-    elif impl == "pallas" and causal:
-        # the TPU flash-attention kernel (kernels/flash_attention.py);
-        # interpret-mode on CPU. GQA handled by the kernel's index maps —
-        # the unexpanded (B,S,K,hd) k/v go straight in.
-        from repro.kernels import ops as kops
-        o = kops.flash_attention(
-            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-            v.transpose(0, 2, 1, 3), scale=_scale(cfg), causal=True,
-            window=window, softcap=cfg.attn_logit_softcap or 0.0,
-            block_q=min(cfg.attn_chunk, 128), block_k=min(cfg.attn_chunk, 128))
-        o = o.transpose(0, 2, 1, 3)
-    elif impl in ("xla_chunked", "xla_chunked_skip", "pallas"):
-        # non-causal pallas (xattn) falls back to the chunked path
+    elif impl in ("kernel", "pallas") and causal:
+        # the TPU flash-attention kernel (kernels/flash_attention.py) with
+        # a reference-VJP backward; interpret-mode on CPU ("pallas" is the
+        # legacy spelling of "kernel").
+        o = _attend_flash_kernel(q, k, v, positions, kv_pos,
+                                 scale=_scale(cfg), window=window,
+                                 cap=cfg.attn_logit_softcap, group=group,
+                                 chunk=cfg.attn_chunk)
+    elif impl in ("xla_chunked", "xla_chunked_skip", "kernel", "pallas"):
+        # non-causal kernel impl (xattn) falls back to the chunked path
         o = _attend_chunked(q, ke, ve, positions, kv_pos, _scale(cfg), window,
                             cfg.attn_logit_softcap, causal, cfg.attn_chunk,
                             skip=impl == "xla_chunked_skip")
@@ -271,9 +323,12 @@ def attn_cache_init(cfg, kind, batch, seq_len, dtype):
     }
 
 
-def attn_decode(params, x, cache, *, cfg, kind, pos):
+def attn_decode(params, x, cache, *, cfg, kind, pos, impl=None):
     """One-token decode. x: (B,1,d); pos: scalar int32 (current position).
 
+    ``impl`` in ("kernel", "pallas") routes the score/softmax/value math
+    to kernels/decode_attention.py (xattn keeps the dense path — static
+    non-causal vision KV); anything else uses the grouped XLA einsum.
     Returns (out (B,1,d), new_cache).
     """
     group = cfg.num_heads // cfg.num_kv_heads
@@ -309,6 +364,19 @@ def attn_decode(params, x, cache, *, cfg, kind, pos):
     valid = (slot_pos >= 0) & (slot_pos <= pos)
     if window:
         valid &= pos - slot_pos < window
+
+    impl = impl or cfg.attn_impl
+    if impl in ("kernel", "pallas"):
+        # the TPU decode-attention kernel: one (B,H,hd) query against the
+        # compact (B,K,cap,hd) cache, ring-buffer validity from slot_pos
+        # inside the kernel (same semantics as `valid` above).
+        from repro.kernels import ops as kops
+        o = kops.decode_attention(
+            q[:, 0], k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            slot_pos.astype(jnp.int32), jnp.asarray(pos, jnp.int32),
+            scale=_scale(cfg), softcap=cfg.attn_logit_softcap or 0.0,
+            window=window, block_k=_divisor_block(cap, 128))
+        return _out_proj(params, cfg, o[:, None]), {"k": k, "v": v}
 
     # grouped GQA einsum directly against the compact (B,S,K,hd) cache:
     # expanding KV to H heads here would read+write `group`x the cache

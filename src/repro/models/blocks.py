@@ -139,7 +139,7 @@ def block_apply(params, x, *, cfg, positions, pattern=None, vision=None,
     return x, aux, cache
 
 
-def block_decode(params, x, cache, *, cfg, pos, pattern=None):
+def block_decode(params, x, cache, *, cfg, pos, pattern=None, impl=None):
     """One-token decode through a super-block. Returns (x, new_cache)."""
     pattern = pattern if pattern is not None else cfg.block_pattern
     _, norm_fn = make_norm(cfg)
@@ -150,7 +150,8 @@ def block_decode(params, x, cache, *, cfg, pos, pattern=None):
         h = norm_fn(layer["pre_norm"], x)
         if mixer in ATTN_KINDS:
             h, nc = attention.attn_decode(layer["mixer"], h, lcache,
-                                          cfg=cfg, kind=mixer, pos=pos)
+                                          cfg=cfg, kind=mixer, pos=pos,
+                                          impl=impl)
         elif mixer == "mamba":
             h, nc = mamba.mamba_decode(layer["mixer"], h, lcache, cfg)
         elif mixer == "mlstm":

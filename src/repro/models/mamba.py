@@ -76,12 +76,18 @@ def _segsum(a):
     return jnp.where(mask, out, -jnp.inf)
 
 
-def mamba_apply(params, x, cfg, state=None, return_state=False):
+def mamba_apply(params, x, cfg, state=None, return_state=False, impl=None):
     """Full-sequence (chunked) Mamba2. x: (B,S,d).
 
     state: optional dict {conv (B,W-1,C), ssm (B,H,P,N)} to continue from.
-    Returns (y, new_state | None).
+    impl: "xla" (default, the einsum chunk math below) or "kernel"
+    (kernels/ssd_chunk.py per chunk — skips the (b,H,L,L) ``_segsum``
+    materialisation; backward via the reference VJP). Defaults to
+    ``cfg.ssd_impl``. Returns (y, new_state | None).
     """
+    impl = impl or getattr(cfg, "ssd_impl", "xla")
+    if impl not in ("xla", "kernel", "pallas"):
+        raise ValueError(f"unknown ssd impl {impl}")
     b, s, d = x.shape
     d_in, nh, p, n = _dims(cfg)
     L = min(cfg.ssm_chunk, s)
@@ -123,6 +129,19 @@ def mamba_apply(params, x, cfg, state=None, return_state=False):
     def chunk_step(h, inputs):
         # checkpointed: the (b,H,L,L) decay matrix is recomputed in backward
         c_i, b_i, x_i, da_i = inputs            # (b,L,n) (b,L,n) (b,L,H,p) (b,L,H)
+        if impl in ("kernel", "pallas"):
+            # the TPU SSD kernel works per (batch, head) instance: flatten
+            # (b, H) -> BH with the single B/C group repeated per head.
+            from repro.kernels import ops as kops
+            bh = b * nh
+            c_k = jnp.repeat(c_i[:, None], nh, 1).reshape(bh, L, n)
+            b_k = jnp.repeat(b_i[:, None], nh, 1).reshape(bh, L, n)
+            x_k = x_i.transpose(0, 2, 1, 3).reshape(bh, L, p)
+            da_k = da_i.transpose(0, 2, 1).reshape(bh, L, 1)
+            y_k, h_k = kops.ssd_chunk_trainable(c_k, b_k, x_k, da_k,
+                                                h.reshape(bh, p, n))
+            return (h_k.reshape(b, nh, p, n),
+                    y_k.reshape(b, nh, L, p).transpose(0, 2, 1, 3))
         acs = jnp.cumsum(da_i, axis=1)                          # (b,L,H)
         lmat = jnp.exp(_segsum(da_i.transpose(0, 2, 1)))        # (b,H,L,L)
         y_diag = jnp.einsum("bln,bsn,bhls,bshp->blhp",

@@ -150,7 +150,8 @@ def prefill(params, tokens, *, cfg, vision=None, impl=None, cache_seq_len):
                    build_cache=True, cache_seq_len=cache_seq_len)
 
 
-def decode_step(params, tokens, cache, pos, *, cfg, unroll=False):
+def decode_step(params, tokens, cache, pos, *, cfg, unroll=False,
+                impl=None):
     """One-token decode. tokens: (B,1) int32; pos: scalar int32 (position of
     this token). Returns (hidden (B,1,d), new_cache).
 
@@ -163,12 +164,13 @@ def decode_step(params, tokens, cache, pos, *, cfg, unroll=False):
 
     def body(x, block_params, cache_slice):
         x, nc = blocks.block_decode(block_params, x, cache_slice["block"],
-                                    cfg=cfg, pos=pos)
+                                    cfg=cfg, pos=pos, impl=impl)
         nc = {"block": nc}
         if cfg.shared_attn_every:
             x, nsc = blocks.block_decode(params["shared"], x,
                                          cache_slice["shared"], cfg=cfg,
-                                         pos=pos, pattern=SHARED_PATTERN)
+                                         pos=pos, pattern=SHARED_PATTERN,
+                                         impl=impl)
             nc["shared"] = nsc
         return x, nc
 
@@ -214,9 +216,10 @@ def apply_lm(params, tokens, *, cfg, vision=None, impl=None):
         baseline_from_hidden(params, cfg, h), aux
 
 
-def serve_step(params, tokens, cache, pos, *, cfg, unroll=False):
+def serve_step(params, tokens, cache, pos, *, cfg, unroll=False,
+               impl=None):
     """(B,1) + cache -> (logits fp32 (B,1,V), baseline, new_cache)."""
     h, new_cache = decode_step(params, tokens, cache, pos, cfg=cfg,
-                               unroll=unroll)
+                               unroll=unroll, impl=impl)
     return (logits_from_hidden(params, cfg, h),
             baseline_from_hidden(params, cfg, h), new_cache)

@@ -32,7 +32,7 @@ def test_flash_attention_sweep(b, h, kh, s, hd, win, cap, dtype):
     rng = np.random.default_rng(hash((b, h, s, hd)) % 2**31)
     q, k, v = _qkv(rng, b, h, kh, s, hd, dtype)
     out = ops.flash_attention(q, k, v, window=win, softcap=cap,
-                              block_q=64, block_k=64, interpret=True)
+                              block_q=64, block_k=64)
     exp = ref.ref_flash_attention(q, k, v, window=win, softcap=cap)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(out.astype(jnp.float32),
@@ -42,8 +42,7 @@ def test_flash_attention_sweep(b, h, kh, s, hd, win, cap, dtype):
 def test_flash_non_causal():
     rng = np.random.default_rng(0)
     q, k, v = _qkv(rng, 1, 4, 2, 128, 64, jnp.float32)
-    out = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
-                              interpret=True)
+    out = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
     exp = ref.ref_flash_attention(q, k, v, causal=False)
     np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
 
@@ -65,8 +64,7 @@ def test_decode_attention_sweep(b, h, kh, s, hd, win, pf):
     v = jnp.asarray(rng.normal(0, 1, (b, kh, s, hd)), jnp.float32)
     pos = jnp.int32(int(pf * (s - 1)))
     slot = jnp.arange(s, dtype=jnp.int32)
-    out = ops.decode_attention(q, k, v, slot, pos, window=win, block_k=64,
-                               interpret=True)
+    out = ops.decode_attention(q, k, v, slot, pos, window=win, block_k=64)
     exp = ref.ref_decode_attention(q, k, v, slot, pos, window=win)
     np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
 
@@ -81,8 +79,7 @@ def test_decode_ring_buffer_slots():
     pos = jnp.int32(100)
     idx = jnp.arange(s)
     slot = pos - jnp.mod(pos - idx, s)  # ring semantics
-    out = ops.decode_attention(q, k, v, slot, pos, window=s, block_k=32,
-                               interpret=True)
+    out = ops.decode_attention(q, k, v, slot, pos, window=s, block_k=32)
     exp = ref.ref_decode_attention(q, k, v, slot, pos, window=s)
     np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
 
@@ -92,7 +89,7 @@ def test_vtrace_kernel_sweep(t, b):
     rng = np.random.default_rng(t * 1000 + b)
     deltas = jnp.asarray(rng.normal(0, 1, (t, b)), jnp.float32)
     dcs = jnp.asarray(rng.random((t, b)) * 0.99, jnp.float32)
-    out = ops.vtrace_acc(deltas, dcs, interpret=True)
+    out = ops.vtrace_acc(deltas, dcs)
     exp = ref.ref_vtrace_scan(deltas, dcs)
     np.testing.assert_allclose(out, exp, rtol=1e-6, atol=1e-6)
 
@@ -112,7 +109,7 @@ def test_flash_attention_matches_model_path():
     out = ops.flash_attention(q.transpose(0, 2, 1, 3),
                               k.transpose(0, 2, 1, 3),
                               v.transpose(0, 2, 1, 3), block_q=64,
-                              block_k=64, interpret=True)
+                              block_k=64)
     np.testing.assert_allclose(out.transpose(0, 2, 1, 3), dense,
                                rtol=2e-5, atol=2e-5)
 
@@ -134,7 +131,7 @@ def test_ssd_chunk_kernel_sweep(bh, l, n, p):
     x = jnp.asarray(rng.normal(0, 1, (bh, l, p)), jnp.float32)
     da = jnp.asarray(-rng.random((bh, l, 1)) * 0.1, jnp.float32)
     h = jnp.asarray(rng.normal(0, 1, (bh, p, n)), jnp.float32)
-    y, hn = ops.ssd_chunk(c, b, x, da, h, interpret=True)
+    y, hn = ops.ssd_chunk(c, b, x, da, h)
     yr, hr = ref.ref_ssd_chunk(c, b, x, da, h)
     np.testing.assert_allclose(y, yr, rtol=3e-5, atol=3e-5)
     np.testing.assert_allclose(hn, hr, rtol=3e-5, atol=3e-5)
@@ -176,7 +173,7 @@ def test_ssd_chunk_matches_model_mamba():
     x_k = xh.transpose(0, 2, 1, 3).reshape(bsz * nh, L, p_)
     da_k = da.transpose(0, 2, 1).reshape(bsz * nh, L, 1)
     h0 = jnp.zeros((bsz * nh, p_, n_), jnp.float32)
-    y_k, h_k = ops.ssd_chunk(c_k, b_k, x_k, da_k, h0, interpret=True)
+    y_k, h_k = ops.ssd_chunk(c_k, b_k, x_k, da_k, h0)
     # model state layout: (B, H, P, N)
     np.testing.assert_allclose(
         h_k.reshape(bsz, nh, p_, n_), st["ssm"], rtol=3e-4, atol=3e-4)

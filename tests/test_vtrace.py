@@ -120,8 +120,7 @@ def test_kernel_path_matches_scan():
     rng = np.random.default_rng(4)
     args = _rand(rng, 23, 64)
     a = vtrace_from_importance_weights(*map(jnp.asarray, args))
-    b = ops.vtrace_from_importance_weights_kernel(*map(jnp.asarray, args),
-                                                  interpret=True)
+    b = ops.vtrace_from_importance_weights_kernel(*map(jnp.asarray, args))
     np.testing.assert_allclose(a.vs, b.vs, rtol=1e-6, atol=1e-6)
     np.testing.assert_allclose(a.pg_advantages, b.pg_advantages,
                                rtol=1e-6, atol=1e-6)
