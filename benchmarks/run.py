@@ -482,6 +482,61 @@ def bench_ssd_chunk():
     row("ssd_chunk_pallas_interp", us, "interpret-mode")
 
 
+def bench_serving():
+    """Continuous vs static batching on the DecodeSession server under
+    Poisson arrivals with heavy-tail (lognormal) prompt/generation lengths
+    — the workload where per-step admission pays: static batching holds
+    freed slots hostage to the longest generation in the batch. Per-request
+    keys are pinned so both policies serve IDENTICAL token streams; rows
+    report request-latency p50/p99 (us) and sustained generated tok/s."""
+    from repro.configs import get_reduced_config
+    from repro.launch.serve import Server
+    from repro.models import model as M
+
+    cfg = get_reduced_config("qwen3-4b")
+    params, _ = M.init(jax.random.PRNGKey(0), cfg)
+    n_req = 12 if SMALL else 48
+    max_batch = 4
+    max_len = 24 if SMALL else 64
+    rng = np.random.default_rng(0)
+    plens = np.clip(rng.lognormal(1.0, 0.8, n_req).astype(int) + 1,
+                    1, max_len // 2)
+    glens = np.clip(rng.lognormal(1.2, 1.0, n_req).astype(int) + 1,
+                    1, max_len // 2)
+    gaps = rng.exponential(0.005, n_req)         # Poisson arrivals
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(p)) for p in plens]
+    keys = [np.asarray(jax.random.PRNGKey(1000 + i)) for i in range(n_req)]
+
+    def run(policy):
+        server = Server(cfg, params, max_batch=max_batch, max_len=max_len,
+                        policy=policy).start()
+        t0 = time.perf_counter()
+        handles = []
+        for i in range(n_req):
+            time.sleep(gaps[i])
+            handles.append(server.submit(prompts[i],
+                                         max_tokens=int(glens[i]),
+                                         key=keys[i]))
+        tokens = sum(h.result(timeout=600).shape[0] - h.prompt.shape[0]
+                     for h in handles)
+        dt = time.perf_counter() - t0
+        lat = np.asarray([h.t_done - h.t_submit for h in handles])
+        server.stop()
+        return lat, tokens / dt, server.steps
+
+    run("continuous")   # warmup: pay the per-bucket prefill compiles once
+    stats = {}
+    for policy in ("continuous", "static"):
+        lat, tps, steps = run(policy)
+        stats[policy] = tps
+        for q, v in (("p50", np.quantile(lat, 0.5)),
+                     ("p99", np.quantile(lat, 0.99))):
+            row(f"serving_{policy}_{q}", v * 1e6,
+                f"{tps:.1f}tok/s steps={steps}")
+    row("serving_speedup", 0.0,
+        f"continuous/static={stats['continuous']/stats['static']:.2f}x")
+
+
 def bench_kernels():
     """xla reference vs Pallas kernel per hot-path op (flash attention,
     decode attention, SSD chunk, V-trace) at a small and a paper-ish shape,
@@ -590,6 +645,7 @@ _SUITES = {
     "batcher": bench_dynamic_batcher,
     "attention": bench_attention,
     "generate": bench_generate,
+    "serving": bench_serving,
     "ssd": bench_ssd_chunk,
     "kernels": bench_kernels,
     "roofline": roofline_table,

@@ -1,15 +1,25 @@
-"""Batched serving with the PolyBeast inference queue: concurrent request
-threads -> DynamicBatcher -> compiled prefill+decode -> scattered replies.
+"""DEPRECATED: fixed-batch serving was replaced by the continuous-batching
+server in ``repro.launch.serve`` (DecodeSession + request handles).
 
-  PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b
-(always uses the reduced config on CPU; pick any of the 10 archs)
+This wrapper is kept so existing invocations keep working — it forwards to
+the new server (``--policy static`` reproduces the old drain-a-batch
+scheduling). Prefer:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced
+
+See README "Serving" and tests/test_decode_session.py for the new API.
 """
 
 import sys
+import warnings
 
 from repro.launch.serve import main
 
 if __name__ == "__main__":
+    warnings.warn(
+        "examples/serve_batched.py is deprecated; use "
+        "`python -m repro.launch.serve` (continuous batching) instead",
+        DeprecationWarning, stacklevel=1)
     argv = sys.argv[1:]
     if "--reduced" not in argv:
         argv.append("--reduced")

@@ -147,6 +147,34 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ImplContext:
+    """Kernel-implementation context, resolved ONCE at the CLI boundary.
+
+    Collapses the per-call ``attn_impl=`` / ``ssd_impl=`` kwarg threading:
+    drivers fold the CLI flags into the ``ModelConfig`` via ``apply`` and
+    every downstream path (learner factories, generate/DecodeSession,
+    serving, spec builders) reads ``cfg.attn_impl`` / ``cfg.ssd_impl``.
+    ``None`` fields keep the config's existing choice.
+    """
+    attn: Optional[str] = None   # auto | xla | xla_chunked | xla_chunked_skip | kernel
+    ssd: Optional[str] = None    # xla | kernel
+
+    @classmethod
+    def from_args(cls, args) -> "ImplContext":
+        """Build from an argparse namespace carrying --attn-impl/--ssd-impl."""
+        return cls(attn=getattr(args, "attn_impl", None),
+                   ssd=getattr(args, "ssd_impl", None))
+
+    def apply(self, cfg: "ModelConfig") -> "ModelConfig":
+        over = {}
+        if self.attn:
+            over["attn_impl"] = self.attn
+        if self.ssd:
+            over["ssd_impl"] = self.ssd
+        return dataclasses.replace(cfg, **over) if over else cfg
+
+
+@dataclasses.dataclass(frozen=True)
 class InputShape:
     name: str
     seq_len: int

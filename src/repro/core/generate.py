@@ -1,73 +1,385 @@
-"""Autoregressive generation with the decode cache (the actor-side
+"""Autoregressive decoding on a unified per-slot session (the actor-side
 inference path for LLM-policy IMPALA, and the serving loop).
 
-``generate`` runs prefill over the prompt then a compiled ``lax.scan`` of
-single-token decode steps, sampling from the policy and recording the
-behavior log-prob of every sampled token — exactly the data V-trace needs
-from the behavior policy (DESIGN.md §2).
+There is exactly ONE decode loop in the codebase. ``_session_prefill`` /
+``_session_step`` are pure functions over a *session state* pytree with one
+row per slot:
+
+    {"cache":  decode cache, leaves (G, B, cap, ...)  (batch axis 1)
+     "pos":    (B,) int32  position of the next token to decode
+     "last":   (B,) int32  last sampled token (fed on the next step)
+     "keys":   (B, 2) uint32  per-slot PRNG keys, split sequentially
+     "temp":   (B,) float32  per-slot sampling temperature
+     "active": (B,) bool   slots currently decoding}
+
+``generate`` (fixed-batch rollouts: every slot admitted together, no
+eviction) and ``DecodeSession`` (continuous batching: admission/eviction
+every step via ``prefill_into``/``step``/``evict``) both drive the same
+compiled step, shared through a module-level cache keyed by
+(cfg, mesh, rules) — a Server, a GeneratorSource and a benchmark arm with
+the same config reuse one compile.
+
+Inactive slots still compute (lockstep batch) but their pos/last/keys are
+frozen and admission rewrites the whole cache row, so a slot's token
+stream is fully determined by its own (prompt, key, temperature) — the
+single-request continuous server is bitwise-identical to ``generate``.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.batcher import bucket_size
 from repro.models import model as model_lib
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "num_steps",
-                                             "temperature", "attn_impl"))
+def _sample_row(key, logits, temp):
+    """Sample one token for one slot. logits (V,) fp32."""
+    logits = logits / temp
+    tok = jax.random.categorical(key, logits)
+    lp = jax.nn.log_softmax(logits)
+    chosen = lp[tok]
+    ent = -jnp.sum(jnp.exp(lp) * lp)
+    return tok.astype(jnp.int32), chosen, ent
+
+
+def _split_rows(keys):
+    """(B,2) -> (carry (B,2), use (B,2)): per-slot sequential key split."""
+    split = jax.vmap(jax.random.split)(keys)
+    return split[:, 0], split[:, 1]
+
+
+def _out(tok, lp, ent, baseline):
+    return {"token": tok, "logprob": lp, "entropy": ent,
+            "baseline": (baseline[:, 0] if baseline is not None
+                         else jnp.zeros_like(lp))}
+
+
+def _session_prefill(params, prompt, keys, temp, *, cfg, cache_seq_len,
+                     last_index=None, vision=None):
+    """Prefill every row and sample its first token.
+
+    prompt (B, P) int32 (may be right-padded; ``last_index`` = index of the
+    true last token, default P-1). Returns (state, out) where ``out`` holds
+    the FIRST sampled token per row, aligned with ``_session_step``'s.
+    """
+    b, p = prompt.shape
+    hidden, _, cache = model_lib.prefill(params, prompt, cfg=cfg,
+                                         vision=vision,
+                                         cache_seq_len=cache_seq_len)
+    if last_index is None:
+        h_last = hidden[:, -1:]
+        pos0 = jnp.full((b,), p, jnp.int32)
+    else:
+        h_last = jax.lax.dynamic_slice_in_dim(hidden, last_index, 1, axis=1)
+        pos0 = jnp.full((b,), 0, jnp.int32) + (last_index + 1)
+    logits0 = model_lib.logits_from_hidden(params, cfg, h_last)
+    base0 = model_lib.baseline_from_hidden(params, cfg, h_last)
+    keys, use = _split_rows(keys)
+    tok, lp, ent = jax.vmap(_sample_row)(use, logits0[:, 0], temp)
+    state = {"cache": cache, "pos": pos0, "last": tok, "keys": keys,
+             "temp": temp, "active": jnp.ones((b,), bool)}
+    return state, _out(tok, lp, ent, base0)
+
+
+def _session_step(params, state, *, cfg):
+    """Advance every slot one token. Inactive rows still run (lockstep
+    batch) but their pos/last/keys are frozen — their cache writes land in
+    their own row only, which admission fully overwrites."""
+    pos, last, keys = state["pos"], state["last"], state["keys"]
+    temp, active = state["temp"], state["active"]
+    logits, baseline, cache = model_lib.serve_step(
+        params, last[:, None], state["cache"], pos, cfg=cfg, unroll=True)
+    new_keys, use = _split_rows(keys)
+    tok, lp, ent = jax.vmap(_sample_row)(use, logits[:, 0], temp)
+    new_state = {
+        "cache": cache,
+        "pos": jnp.where(active, pos + 1, pos),
+        "last": jnp.where(active, tok, last),
+        "keys": jnp.where(active[:, None], new_keys, keys),
+        "temp": temp,
+        "active": active,
+    }
+    return new_state, _out(tok, lp, ent, baseline)
+
+
+# ---------------------------------------------------------------------------
+# compiled-session cache: one set of jitted fns per (cfg, mesh, rules)
+# ---------------------------------------------------------------------------
+
+_FNS_CACHE: Dict[tuple, "_SessionFns"] = {}
+
+
+def _freeze_rules(rules):
+    return tuple(sorted(rules.items())) if isinstance(rules, dict) else rules
+
+
+class _SessionFns:
+    """Jitted prefill/step/admit/evict for one (cfg, mesh, rules)."""
+
+    def __init__(self, cfg, mesh, rules):
+        self.cfg, self.mesh, self.rules = cfg, mesh, rules
+
+        def _ctx():
+            from repro.distributed import sharding as shd
+            if mesh is None:
+                import contextlib
+                return contextlib.nullcontext()
+            return shd.use_rules(mesh, rules)
+
+        def _constrain_cache(cache, batch, seq_len):
+            if mesh is None:
+                return cache
+            from repro.launch import specs as specs_lib
+            shardings = jax.tree.map(
+                lambda s: s.sharding,
+                specs_lib.cache_specs(cfg, mesh, batch, seq_len))
+            return jax.tree.map(jax.lax.with_sharding_constraint, cache,
+                                shardings)
+
+        def prefill(params, prompt, keys, temp, cache_seq_len):
+            with _ctx():
+                state, out = _session_prefill(params, prompt, keys, temp,
+                                              cfg=cfg,
+                                              cache_seq_len=cache_seq_len)
+                state["cache"] = _constrain_cache(
+                    state["cache"], prompt.shape[0], cache_seq_len)
+            return state, out
+
+        def step(params, state):
+            with _ctx():
+                return _session_step(params, state, cfg=cfg)
+
+        def admit(params, state, prompt, length, slot, key, temp,
+                  cache_seq_len):
+            """Prefill ONE request (prompt (1, Pb), true length ``length``)
+            and write it into batch row ``slot``: full cache-row overwrite
+            plus pos/last/key/temp/active — nothing of the previous tenant
+            survives (no KV-slot leaks across requests)."""
+            with _ctx():
+                row, out = _session_prefill(
+                    params, prompt, key[None], temp[None], cfg=cfg,
+                    cache_seq_len=cache_seq_len, last_index=length - 1)
+            new_cache = jax.tree.map(
+                lambda full, r: jax.lax.dynamic_update_slice_in_dim(
+                    full, r.astype(full.dtype), slot, axis=1),
+                state["cache"], row["cache"])
+            new_state = {
+                "cache": new_cache,
+                "pos": state["pos"].at[slot].set(length),
+                "last": state["last"].at[slot].set(row["last"][0]),
+                "keys": state["keys"].at[slot].set(row["keys"][0]),
+                "temp": state["temp"].at[slot].set(temp),
+                "active": state["active"].at[slot].set(True),
+            }
+            return new_state, out
+
+        def evict(state, slot):
+            return dict(state, active=state["active"].at[slot].set(False))
+
+        self.prefill = jax.jit(prefill,
+                               static_argnames=("cache_seq_len",))
+        self.step = jax.jit(step, donate_argnums=(1,))
+        self.admit = jax.jit(admit, static_argnames=("cache_seq_len",),
+                             donate_argnums=(1,))
+        self.evict = jax.jit(evict, donate_argnums=(0,))
+
+
+def session_fns(cfg, mesh=None, rules=None) -> _SessionFns:
+    key = (cfg, mesh, _freeze_rules(rules))
+    if key not in _FNS_CACHE:
+        _FNS_CACHE[key] = _SessionFns(cfg, mesh, rules)
+    return _FNS_CACHE[key]
+
+
+def prefill_len(cfg, p: int, max_len: int) -> int:
+    """Admission prefill length: bucket-laddered (bounded compile count)
+    where right-padding is provably inert, exact otherwise.
+
+    Right-padding is safe only when every padded cache slot is overwritten
+    before it becomes attendable: true for full causal attention (decode
+    writes slot ``pos`` before attending) and for ring buffers while the
+    bucket stays within the window cap. Recurrent mixers (mamba/xlstm)
+    carry a scanned state polluted by any suffix -> exact length.
+    """
+    if p >= max_len:
+        return max_len
+    if cfg.is_recurrent:
+        return p
+    pb = bucket_size(p)
+    windowed = any(m in ("local_attn", "swa_attn")
+                   for m, _ in cfg.block_pattern)
+    if windowed and pb > cfg.sliding_window:
+        return p
+    return min(pb, max_len)
+
+
+# ---------------------------------------------------------------------------
+# DecodeSession: slot-indexed continuous-batching decode state
+# ---------------------------------------------------------------------------
+
+class DecodeSession:
+    """Slot-indexed decode state with per-step admission/eviction.
+
+    Owns a ``max_batch``-row decode cache (capacity ``max_len`` tokens per
+    slot; on a mesh the layout is pinned to ``launch.specs.cache_specs``)
+    plus per-slot position/token/RNG/temperature state. The serving loop
+    (``launch.serve.Server``) and the RL actor source
+    (``core.sources.GeneratorSource``) both drive this API:
+
+      prefill_into(slot, prompt, key=...) -> first-token dict for the slot
+      step()                              -> per-slot dict for one token
+      evict(slot)                         -> frees the slot
+
+    All device work goes through the shared compiled session fns, so many
+    sessions with one config pay one compile.
+    """
+
+    def __init__(self, params, cfg, *, max_batch: int, max_len: int,
+                 mesh=None, rules=None):
+        if cfg.vision_seq:
+            raise ValueError("DecodeSession serves text-only configs")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.mesh = mesh
+        self._params = params
+        self._fns = session_fns(cfg, mesh, rules)
+        cache = model_lib.cache_init(cfg, max_batch, max_len)
+        if mesh is not None:
+            from repro.launch import specs as specs_lib
+            shardings = jax.tree.map(
+                lambda s: s.sharding,
+                specs_lib.cache_specs(cfg, mesh, max_batch, max_len))
+            cache = jax.tree.map(jax.device_put, cache, shardings)
+        self._state = {
+            "cache": cache,
+            "pos": jnp.zeros((max_batch,), jnp.int32),
+            "last": jnp.zeros((max_batch,), jnp.int32),
+            "keys": jnp.zeros((max_batch, 2), jnp.uint32),
+            "temp": jnp.ones((max_batch,), jnp.float32),
+            "active": jnp.zeros((max_batch,), bool),
+        }
+        self._active = np.zeros(max_batch, bool)   # host mirror
+
+    @property
+    def params(self):
+        return self._params
+
+    @params.setter
+    def params(self, params) -> None:
+        """Swap the served params (e.g. the RL actor following the learner).
+        Safe between calls: the compiled fns take params as an argument."""
+        self._params = params
+
+    # -- slot bookkeeping ---------------------------------------------------
+
+    @property
+    def active(self) -> np.ndarray:
+        return self._active.copy()
+
+    @property
+    def num_active(self) -> int:
+        return int(self._active.sum())
+
+    def free_slot(self) -> Optional[int]:
+        free = np.flatnonzero(~self._active)
+        return int(free[0]) if free.size else None
+
+    # -- session API --------------------------------------------------------
+
+    def prefill_into(self, slot: int, prompt, *, key,
+                     temperature: float = 1.0) -> Dict[str, np.ndarray]:
+        """Admit a request into ``slot``. prompt: (P,) int32, P <= max_len-1.
+        Returns the first sampled token's {token, logprob, entropy,
+        baseline} (scalars, host)."""
+        if self._active[slot]:
+            raise ValueError(f"slot {slot} is occupied (evict first)")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        p = prompt.shape[0]
+        if not 0 < p < self.max_len:
+            raise ValueError(f"prompt length {p} not in [1, {self.max_len})")
+        pb = prefill_len(self.cfg, p, self.max_len)
+        padded = np.zeros((1, pb), np.int32)
+        padded[0, :p] = prompt
+        self._state, out = self._fns.admit(
+            self._params, self._state, jnp.asarray(padded),
+            jnp.int32(p), jnp.int32(slot), jnp.asarray(key),
+            jnp.float32(temperature), cache_seq_len=self.max_len)
+        self._active[slot] = True
+        return {k: np.asarray(v)[0] for k, v in out.items()}
+
+    def step(self) -> Dict[str, np.ndarray]:
+        """Advance every active slot one token. Returns per-slot arrays
+        (B,); entries for inactive slots are garbage — gate on .active."""
+        self._state, out = self._fns.step(self._params, self._state)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    def evict(self, slot: int) -> None:
+        self._state = self._fns.evict(self._state, jnp.int32(slot))
+        self._active[slot] = False
+
+
+# ---------------------------------------------------------------------------
+# fixed-batch rollouts (IMPALA actors, tests)
+# ---------------------------------------------------------------------------
+
 def generate(params, prompt, key, *, cfg, num_steps: int,
-             temperature: float = 1.0, vision=None, attn_impl=None):
-    """prompt: (B, P) int32. attn_impl: attention impl for BOTH prefill
-    and decode (None -> cfg.attn_impl; 'kernel' = Pallas flash kernel for
-    the prefill, Pallas decode-attention kernel per step). Returns dict:
+             temperature: float = 1.0, vision=None, mesh=None, rules=None):
+    """prompt: (B, P) int32. Samples ``num_steps`` tokens for every row
+    through the SAME compiled session step the continuous server runs —
+    a single-request server trace is bitwise-identical to this function.
+    Returns dict:
       tokens    (B, P + num_steps)
       logprob   (B, num_steps)  behavior log-prob of each sampled token
       entropy   (B, num_steps)  policy entropy at each step
       baseline  (B, num_steps)  value estimates V(s_t)
     """
     b, p = prompt.shape
-    total = p + num_steps
-    hidden, _, cache = model_lib.prefill(params, prompt, cfg=cfg,
-                                         vision=vision, impl=attn_impl,
-                                         cache_seq_len=total)
-    logits0 = model_lib.logits_from_hidden(params, cfg, hidden[:, -1:])
-    base0 = model_lib.baseline_from_hidden(params, cfg, hidden[:, -1:])
-
-    def sample(key, logits):
-        logits = logits / temperature
-        tok = jax.random.categorical(key, logits)
-        lp = jax.nn.log_softmax(logits, axis=-1)
-        chosen = jnp.take_along_axis(lp, tok[..., None], axis=-1)[..., 0]
-        ent = -jnp.sum(jnp.exp(lp) * lp, axis=-1)
-        return tok.astype(jnp.int32), chosen, ent
-
-    key, k0 = jax.random.split(key)
-    tok, lp, ent = sample(k0, logits0[:, 0])
-
-    def step(carry, key):
-        cache, tok, lp, ent, base, pos = carry
-        logits, baseline, cache = model_lib.serve_step(
-            params, tok[:, None], cache, pos, cfg=cfg, impl=attn_impl)
-        ntok, nlp, nent = sample(key, logits[:, 0])
-        out = {"token": tok, "logprob": lp, "entropy": ent,
-               "baseline": base}
-        return (cache, ntok, nlp, nent, baseline[:, 0], pos + 1), out
-
-    keys = jax.random.split(key, num_steps)
-    carry = (cache, tok, lp, ent,
-             base0[:, 0] if base0 is not None else jnp.zeros((b,)),
-             jnp.asarray(p, jnp.int32))
-    _, traj = jax.lax.scan(step, carry, keys)
-
-    tokens = jnp.concatenate([prompt, traj["token"].T], axis=1)
+    fns = session_fns(cfg, mesh, rules)
+    keys = jax.random.split(key, b)
+    temp = jnp.full((b,), temperature, jnp.float32)
+    if vision is not None:
+        # VLM rollouts keep the one-shot jitted path (no serving analogue).
+        return _generate_vision(params, prompt, keys, temp, cfg=cfg,
+                                num_steps=num_steps, vision=vision)
+    state, out0 = fns.prefill(params, jnp.asarray(prompt, jnp.int32), keys,
+                              temp, cache_seq_len=p + num_steps)
+    outs = [out0]
+    for _ in range(num_steps - 1):
+        state, out = fns.step(params, state)
+        outs.append(out)
+    stackcat = {k: jnp.stack([o[k] for o in outs], axis=1) for k in outs[0]}
+    tokens = jnp.concatenate([jnp.asarray(prompt, jnp.int32),
+                              stackcat["token"]], axis=1)
     return {
         "tokens": tokens,
-        "logprob": traj["logprob"].T,
-        "entropy": traj["entropy"].T,
-        "baseline": traj["baseline"].T,
+        "logprob": stackcat["logprob"],
+        "entropy": stackcat["entropy"],
+        "baseline": stackcat["baseline"],
     }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_steps"))
+def _generate_vision(params, prompt, keys, temp, *, cfg, num_steps,
+                     vision):
+    """One-shot scan rollout for VLM prompts (vision feeds prefill only)."""
+    b, p = prompt.shape
+    state, out0 = _session_prefill(params, prompt, keys, temp, cfg=cfg,
+                                   cache_seq_len=p + num_steps,
+                                   vision=vision)
+
+    def body(state, _):
+        return _session_step(params, state, cfg=cfg)
+
+    state, traj = jax.lax.scan(body, state, None, length=num_steps - 1)
+    full = {k: jnp.concatenate([out0[k][:, None], jnp.swapaxes(v, 0, 1)],
+                               axis=1) for k, v in traj.items()}
+    tokens = jnp.concatenate([prompt, full["token"]], axis=1)
+    return {"tokens": tokens, "logprob": full["logprob"],
+            "entropy": full["entropy"], "baseline": full["baseline"]}

@@ -181,7 +181,7 @@ def make_recurrent_train_step(agent_apply, opt, train_cfg, *,
 
 def make_lm_train_step(cfg, opt, train_cfg, loss_chunk=512,
                        grad_constraint=None, vtrace_impl="scan",
-                       mesh=None, rules=None, attn_impl=None):
+                       mesh=None, rules=None):
     """IMPALA learner step for LLM policies (DESIGN.md §2).
 
     grad_constraint: optional fn(grads)->grads applied right after jax.grad
@@ -190,8 +190,9 @@ def make_lm_train_step(cfg, opt, train_cfg, loss_chunk=512,
     gradient all-reduce becomes a reduce-scatter and the fp32 optimizer
     temporaries stay sharded over the data axes).
     vtrace_impl: 'scan' or 'kernel' (the Pallas V-trace recursion).
-    attn_impl: attention impl override threaded into the model forward
-    (None -> cfg.attn_impl; 'kernel' selects the Pallas flash kernel).
+    Attention/SSD impls come from ``cfg.attn_impl`` / ``cfg.ssd_impl``,
+    resolved once at the CLI boundary via ``configs.base.ImplContext``
+    ('kernel' selects the Pallas flash kernel).
     mesh/rules: optional 2-D ("data","model") context
     (distributed/sharding.py; rules default MEGATRON_RULES). The token
     batch is constrained to shard B over the data axes and the model's
@@ -215,7 +216,7 @@ def make_lm_train_step(cfg, opt, train_cfg, loss_chunk=512,
         # hidden[t] is the state after consuming token t => predicts t+1.
         # Forward over tokens[:, :-1] keeps S divisible by the chunk sizes.
         hidden, aux, _ = model_lib.forward(params, tokens[:, :-1], cfg=cfg,
-                                           vision=vision, impl=attn_impl)
+                                           vision=vision)
         actions = tokens[:, 1:]
         unembed = model_lib.unembed_matrix(params, cfg)
         logprob, entropy = losses.chunked_logprob_entropy(
@@ -260,19 +261,18 @@ def make_lm_train_step(cfg, opt, train_cfg, loss_chunk=512,
 
 
 def make_lm_pretrain_step(cfg, opt, loss_chunk=512, grad_constraint=None,
-                          mesh=None, rules=None, attn_impl=None):
+                          mesh=None, rules=None):
     """Plain next-token-prediction step (substrate completeness: the data
     pipeline / LM pretraining driver; also the non-RL baseline).
-    grad_constraint/mesh/rules/attn_impl as in ``make_lm_train_step`` —
-    ``--mode lm --mesh-data N --mesh-model M`` runs through the same 2-D
-    mesh path."""
+    grad_constraint/mesh/rules as in ``make_lm_train_step`` (impls come
+    from ``cfg.attn_impl``/``cfg.ssd_impl``) — ``--mode lm --mesh-data N
+    --mesh-model M`` runs through the same 2-D mesh path."""
     mesh_ctx, shard_batch = _make_lm_mesh_fns(mesh, rules)
 
     def loss_fn(params, batch):
         tokens = batch["tokens"]          # (B, S+1)
         hidden, aux, _ = model_lib.forward(params, tokens[:, :-1], cfg=cfg,
-                                           vision=batch.get("vision"),
-                                           impl=attn_impl)
+                                           vision=batch.get("vision"))
         unembed = model_lib.unembed_matrix(params, cfg)
         loss = losses.chunked_softmax_xent(
             hidden, unembed, tokens[:, 1:], chunk=loss_chunk,

@@ -768,11 +768,17 @@ class GeneratorSource:
     """Episodes from the autoregressive decode path: the LM *is* the policy,
     tokens are actions, and the recorded sampling log-probs are the behavior
     policy outputs V-trace needs. Emitted time-major per the contract
-    (obs[t] is the token consumed at step t; action[t] == obs[t+1])."""
+    (obs[t] is the token consumed at step t; action[t] == obs[t+1]).
+
+    Runs through ``generate.DecodeSession`` — the same slot API (and the
+    same compiled step) the serving loop drives. Each episode admits every
+    slot, steps the session in lockstep, then evicts; the decode cache
+    layout is pinned to ``launch.specs.cache_specs`` when a mesh is given.
+    The attention/SSD impls come from the config (see ImplContext)."""
 
     def __init__(self, cfg, *, batch_size: int, episode_length: int, key,
                  reward_fn: Optional[Callable] = None,
-                 temperature: float = 1.0, attn_impl=None):
+                 temperature: float = 1.0, mesh=None, rules=None):
         self._cfg = cfg
         self.batch_size = batch_size
         self.episode_length = episode_length
@@ -781,21 +787,45 @@ class GeneratorSource:
         self._reward_fn = reward_fn or (
             lambda toks: token_task_reward(toks, cfg.vocab_size))
         self._temperature = temperature
-        self._attn_impl = attn_impl
+        self._mesh, self._rules = mesh, rules
+        self._session = None
 
     def start(self, params) -> None:
         del params
 
-    def next_batch(self, params):
+    def _get_session(self, params):
         from repro.core import generate as gen_lib
+        if self._session is None:
+            self._session = gen_lib.DecodeSession(
+                params, self._cfg, max_batch=self.batch_size,
+                max_len=self.episode_length + 1, mesh=self._mesh,
+                rules=self._rules)
+        self._session.params = params   # follow the learner's updates
+        return self._session
+
+    def next_batch(self, params):
         b, t = self.batch_size, self.episode_length
         self._key, k_prompt, k_gen = jax.random.split(self._key, 3)
         prompt = jax.random.randint(k_prompt, (b, 1), 0,
                                     self._cfg.vocab_size)
-        ep = gen_lib.generate(params, prompt, k_gen, cfg=self._cfg,
-                              num_steps=t, temperature=self._temperature,
-                              attn_impl=self._attn_impl)
-        tokens = ep["tokens"]                                  # (B, T+1)
+        sess = self._get_session(params)
+        keys = jax.random.split(k_gen, b)
+        prompt_np = np.asarray(prompt)
+        first = [sess.prefill_into(i, prompt_np[i], key=keys[i],
+                                   temperature=self._temperature)
+                 for i in range(b)]
+        toks = [[f["token"] for f in first]]          # time-major lists
+        lps = [[f["logprob"] for f in first]]
+        for _ in range(t - 1):
+            o = sess.step()
+            toks.append(list(o["token"]))
+            lps.append(list(o["logprob"]))
+        for i in range(b):
+            sess.evict(i)
+        gen_toks = jnp.asarray(np.asarray(toks, np.int32).T)   # (B, T)
+        logprob = jnp.asarray(np.asarray(lps, np.float32).T)   # (B, T)
+        ep = {"logprob": logprob}
+        tokens = jnp.concatenate([prompt, gen_toks], axis=1)   # (B, T+1)
         reward = self._reward_fn(tokens)                       # (B, T)
         done = jnp.zeros((b, t), bool).at[:, -1].set(True)
         tm = lambda x: jnp.swapaxes(x, 0, 1)  # noqa: E731

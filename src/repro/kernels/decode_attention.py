@@ -9,7 +9,10 @@ is read exactly once.
 Supports position-validity masking (ring-buffer sliding-window caches pass
 per-slot positions computed by the wrapper) and logit softcap.
 
-Layout: q (B, H, hd); k, v (B, K, S, hd); slot_pos (S,) int32; pos scalar.
+Layout: q (B, H, hd); k, v (B, K, S, hd); slot_pos (S,) or (B, S) int32;
+pos scalar or (B,). Per-row positions serve the continuous-batching
+decode path, where every batch slot sits at its own sequence position;
+scalar inputs are broadcast (the lockstep `generate` fast path).
 """
 
 from __future__ import annotations
@@ -27,7 +30,7 @@ from repro.kernels.ops import NEG_INF
 
 def _kernel(pos_ref, q_ref, k_ref, v_ref, slot_ref, o_ref,
             m_ref, l_ref, acc_ref, *, scale, softcap, window, bk,
-            num_kv_blocks):
+            num_kv_blocks, kheads):
     ki = pl.program_id(1)
 
     @pl.when(ki == 0)
@@ -39,7 +42,7 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, slot_ref, o_ref,
     q = q_ref[0].astype(jnp.float32)                   # (g, hd)
     k = k_ref[0].astype(jnp.float32)                   # (bk, hd)
     v = v_ref[0].astype(jnp.float32)
-    pos = pos_ref[0]                                   # scalar current position
+    pos = pos_ref[pl.program_id(0) // kheads]          # this row's position
     slot_pos = slot_ref[...]                           # (1, bk) int32
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -71,9 +74,9 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, slot_ref, o_ref,
     static_argnames=("scale", "softcap", "window", "block_k", "interpret"))
 def decode_attention(q, k, v, slot_pos, pos, *, scale=None, softcap=0.0,
                      window=0, block_k=128, interpret=False):
-    """q: (B,H,hd); k,v: (B,K,S,hd); slot_pos: (S,) int32 position held by
-    each cache slot (-1 = empty); pos: scalar int32 current position.
-    Returns (B,H,hd)."""
+    """q: (B,H,hd); k,v: (B,K,S,hd); slot_pos: (S,) or (B,S) int32 position
+    held by each cache slot (-1 = empty); pos: scalar or (B,) int32 current
+    position per sequence. Returns (B,H,hd)."""
     b, h, hd = q.shape
     _, kheads, s, _ = k.shape
     assert h % kheads == 0
@@ -87,11 +90,13 @@ def decode_attention(q, k, v, slot_pos, pos, *, scale=None, softcap=0.0,
     qf = q.reshape(b * kheads, group, hd)
     kf = k.reshape(b * kheads, s, hd)
     vf = v.reshape(b * kheads, s, hd)
-    slot2d = slot_pos.reshape(1, s)
-    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    slot2d = jnp.broadcast_to(jnp.asarray(slot_pos, jnp.int32).reshape(-1, s),
+                              (b, s))
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
 
     kernel = functools.partial(_kernel, scale=scale, softcap=softcap,
-                               window=window, bk=bk, num_kv_blocks=nk)
+                               window=window, bk=bk, num_kv_blocks=nk,
+                               kheads=kheads)
 
     out = pl.pallas_call(
         kernel,
@@ -101,7 +106,7 @@ def decode_attention(q, k, v, slot_pos, pos, *, scale=None, softcap=0.0,
             pl.BlockSpec((1, group, hd), lambda bh, ki: (bh, 0, 0)),
             pl.BlockSpec((1, bk, hd), lambda bh, ki: (bh, ki, 0)),
             pl.BlockSpec((1, bk, hd), lambda bh, ki: (bh, ki, 0)),
-            pl.BlockSpec((1, bk), lambda bh, ki: (0, ki)),
+            pl.BlockSpec((1, bk), lambda bh, ki: (bh // kheads, ki)),
         ],
         out_specs=pl.BlockSpec((1, group, hd), lambda bh, ki: (bh, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b * kheads, group, hd), q.dtype),

@@ -37,7 +37,8 @@ def ref_flash_attention(q, k, v, *, scale=None, causal=True, window=0,
 
 def ref_decode_attention(q, k, v, slot_pos, pos, *, scale=None, softcap=0.0,
                          window=0):
-    """q: (B,H,hd); k,v: (B,K,S,hd); slot_pos (S,); pos scalar."""
+    """q: (B,H,hd); k,v: (B,K,S,hd); slot_pos (S,) or (B,S); pos scalar
+    or (B,) — per-row positions for the continuous-batching decode path."""
     b, h, hd = q.shape
     kheads, s = k.shape[1], k.shape[2]
     group = h // kheads
@@ -47,10 +48,12 @@ def ref_decode_attention(q, k, v, slot_pos, pos, *, scale=None, softcap=0.0,
     logits = jnp.einsum("bkgh,bkth->bkgt", qg, k.astype(jnp.float32)) * scale
     if softcap:
         logits = softcap * jnp.tanh(logits / softcap)
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    slot_pos = jnp.broadcast_to(jnp.asarray(slot_pos).reshape(-1, s), (b, s))
+    pos = jnp.broadcast_to(jnp.asarray(pos).reshape(-1), (b,))
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
     if window:
-        valid &= pos - slot_pos < window
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+        valid &= pos[:, None] - slot_pos < window
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkgt,bkth->bkgh", p, v.astype(jnp.float32))
     return o.reshape(b, h, hd).astype(q.dtype)

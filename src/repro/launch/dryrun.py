@@ -37,7 +37,7 @@ import traceback
 import jax
 
 from repro.configs import ARCHS
-from repro.configs.base import INPUT_SHAPES
+from repro.configs.base import INPUT_SHAPES, ImplContext
 from repro.distributed.sharding import RULE_SETS
 from repro.launch import mesh as mesh_lib
 from repro.launch.specs import build_program
@@ -131,7 +131,7 @@ def _analyze(compiled):
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool, rules_name: str,
             out_dir: str, verbose: bool = True, with_block: bool = True,
-            attn_impl=None, ssd_impl=None):
+            impls=None):
     from repro.launch.roofline import (build_block_program,
                                        inner_scan_corrections,
                                        kernel_rooflines)
@@ -144,8 +144,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, rules_name: str,
 
     t0 = time.time()
     step_fn, args, cfg, jit_kwargs = build_program(arch, shape_name, mesh,
-                                                   rules, attn_impl=attn_impl,
-                                                   ssd_impl=ssd_impl)
+                                                   rules, impls=impls)
     with mesh:
         lowered = jax.jit(step_fn, **jit_kwargs).lower(*args)
         t_lower = time.time() - t0
@@ -274,7 +273,7 @@ def main(argv=None):
         try:
             run_one(arch, shape, multi_pod=args.multi_pod,
                     rules_name=args.rules, out_dir=args.out,
-                    attn_impl=args.attn_impl, ssd_impl=args.ssd_impl)
+                    impls=ImplContext.from_args(args))
         except Exception as e:  # noqa: BLE001
             failures.append((arch, shape, repr(e)))
             print(f"[{arch} | {shape}] FAILED: {e}", flush=True)

@@ -19,8 +19,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
-                                TrainConfig)
+from repro.configs.base import (INPUT_SHAPES, ImplContext, InputShape,
+                                ModelConfig, TrainConfig)
 from repro.core import learner as learner_lib
 from repro.distributed import sharding as shd
 from repro.models import model as model_lib
@@ -39,12 +39,12 @@ def _shape(shape) :
     return shape if isinstance(shape, InputShape) else INPUT_SHAPES[shape]
 
 
-def resolve_config(arch: str, shape_name, base_cfg=None, attn_impl=None,
-                   ssd_impl=None) -> ModelConfig:
+def resolve_config(arch: str, shape_name, base_cfg=None,
+                   impls: ImplContext | None = None) -> ModelConfig:
     """Arch config, specialised to the input shape where required.
     ``shape_name`` may be a name or an InputShape; ``base_cfg`` overrides the
-    registry lookup (reduced-config integration tests). ``attn_impl`` /
-    ``ssd_impl`` override the impl context (dryrun --attn-impl/--ssd-impl);
+    registry lookup (reduced-config integration tests). ``impls`` is the
+    CLI-resolved kernel-impl context (dryrun --attn-impl/--ssd-impl);
     the default stays the memory-bounded chunked path."""
     shape = _shape(shape_name)
     shape_name = shape.name
@@ -63,9 +63,10 @@ def resolve_config(arch: str, shape_name, base_cfg=None, attn_impl=None,
     # checkpointed), so no (S,S) scores or per-iteration softmax residuals
     # are ever resident. FLOPs hidden inside the chunk loops are restored
     # by roofline.inner_scan_corrections.
-    cfg = dataclasses.replace(cfg, attn_impl=attn_impl or "xla_chunked")
-    if ssd_impl:
-        cfg = dataclasses.replace(cfg, ssd_impl=ssd_impl)
+    impls = impls or ImplContext()
+    cfg = dataclasses.replace(cfg, attn_impl=impls.attn or "xla_chunked")
+    if impls.ssd:
+        cfg = dataclasses.replace(cfg, ssd_impl=impls.ssd)
     return cfg
 
 
@@ -138,9 +139,9 @@ def cache_specs(cfg: ModelConfig, mesh, batch: int, seq_len: int):
 
 def build_train(arch: str, shape_name, mesh, rules,
                 train_cfg: TrainConfig | None = None, base_cfg=None,
-                attn_impl=None, ssd_impl=None):
+                impls=None):
     """IMPALA LM learner step + input specs for a train shape."""
-    cfg = resolve_config(arch, shape_name, base_cfg, attn_impl, ssd_impl)
+    cfg = resolve_config(arch, shape_name, base_cfg, impls)
     ishape = _shape(shape_name)
     train_cfg = train_cfg or TrainConfig()
     opt = make_optimizer(train_cfg)
@@ -200,8 +201,8 @@ def build_train(arch: str, shape_name, mesh, rules,
 
 
 def build_prefill(arch: str, shape_name, mesh, rules, base_cfg=None,
-                  attn_impl=None, ssd_impl=None):
-    cfg = resolve_config(arch, shape_name, base_cfg, attn_impl, ssd_impl)
+                  impls=None):
+    cfg = resolve_config(arch, shape_name, base_cfg, impls)
     ishape = _shape(shape_name)
     b, s = ishape.global_batch, ishape.seq_len
     params, _ = abstract_params(cfg, mesh, rules)
@@ -230,8 +231,8 @@ def build_prefill(arch: str, shape_name, mesh, rules, base_cfg=None,
 
 
 def build_decode(arch: str, shape_name, mesh, rules, base_cfg=None,
-                 attn_impl=None, ssd_impl=None):
-    cfg = resolve_config(arch, shape_name, base_cfg, attn_impl, ssd_impl)
+                 impls=None):
+    cfg = resolve_config(arch, shape_name, base_cfg, impls)
     ishape = _shape(shape_name)
     b, s = ishape.global_batch, ishape.seq_len
     params, _ = abstract_params(cfg, mesh, rules)
@@ -258,14 +259,13 @@ def build_decode(arch: str, shape_name, mesh, rules, base_cfg=None,
 
 
 def build_program(arch: str, shape_name, mesh, rules, base_cfg=None,
-                  attn_impl=None, ssd_impl=None):
+                  impls=None):
     kind = _shape(shape_name).kind
     if kind == "train":
         return build_train(arch, shape_name, mesh, rules, base_cfg=base_cfg,
-                           attn_impl=attn_impl, ssd_impl=ssd_impl)
+                           impls=impls)
     if kind == "prefill":
         return build_prefill(arch, shape_name, mesh, rules,
-                             base_cfg=base_cfg, attn_impl=attn_impl,
-                             ssd_impl=ssd_impl)
+                             base_cfg=base_cfg, impls=impls)
     return build_decode(arch, shape_name, mesh, rules, base_cfg=base_cfg,
-                        attn_impl=attn_impl, ssd_impl=ssd_impl)
+                        impls=impls)

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, get_reduced_config
 from repro.configs.atari_impala import small_train
-from repro.configs.base import TrainConfig
+from repro.configs.base import ImplContext, TrainConfig
 from repro.core import learner as learner_lib
 from repro.core import sources as sources_lib
 from repro.core.runtime import Runtime
@@ -154,14 +154,8 @@ def _restore_shardings(params, opt_state):
 
 def _apply_impls(cfg, args):
     """Fold --attn-impl / --ssd-impl into the model config (the single
-    context every downstream path reads, mirroring --vtrace-impl)."""
-    import dataclasses
-    over = {}
-    if args.attn_impl:
-        over["attn_impl"] = args.attn_impl
-    if args.ssd_impl:
-        over["ssd_impl"] = args.ssd_impl
-    return dataclasses.replace(cfg, **over) if over else cfg
+    ImplContext every downstream path reads, mirroring --vtrace-impl)."""
+    return ImplContext.from_args(args).apply(cfg)
 
 
 def build_lm_rl(args):
@@ -176,12 +170,11 @@ def build_lm_rl(args):
     opt_state = opt.init(params)   # zeros_like inherits the param shardings
     source = sources_lib.GeneratorSource(
         cfg, batch_size=args.batch or 16, episode_length=args.seq,
-        key=jax.random.PRNGKey(7), attn_impl=args.attn_impl)
+        key=jax.random.PRNGKey(7), mesh=mesh, rules=rules)
     step_fn = jax.jit(sources_lib.lm_rl_step_from_rollout(
         learner_lib.make_lm_train_step(cfg, opt, train_cfg,
                                        loss_chunk=args.seq,
                                        vtrace_impl=args.vtrace_impl,
-                                       attn_impl=args.attn_impl,
                                        grad_constraint=grad_constraint,
                                        mesh=mesh, rules=rules)))
     extras = {"log_keys": ("reward_per_step", "pg_loss", "entropy_loss")}
@@ -202,7 +195,7 @@ def build_lm(args):
     mesh, rules, params, grad_constraint = _lm_mesh_setup(args, params, axes)
     opt_state = opt.init(params)
     step_fn = jax.jit(learner_lib.make_lm_pretrain_step(
-        cfg, opt, loss_chunk=min(512, args.seq), attn_impl=args.attn_impl,
+        cfg, opt, loss_chunk=min(512, args.seq),
         grad_constraint=grad_constraint, mesh=mesh, rules=rules))
 
     b = args.batch or 16

@@ -324,7 +324,10 @@ def attn_cache_init(cfg, kind, batch, seq_len, dtype):
 
 
 def attn_decode(params, x, cache, *, cfg, kind, pos, impl=None):
-    """One-token decode. x: (B,1,d); pos: scalar int32 (current position).
+    """One-token decode. x: (B,1,d); pos: scalar int32 (lockstep decode,
+    every row at the same position) or (B,) int32 (continuous batching,
+    each slot at its own position — rope, cache writes and validity masks
+    all become per-row).
 
     ``impl`` in ("kernel", "pallas") routes the score/softmax/value math
     to kernels/decode_attention.py (xattn keeps the dense path — static
@@ -344,26 +347,38 @@ def attn_decode(params, x, cache, *, cfg, kind, pos, impl=None):
         return _out_proj(params, cfg, o), cache
 
     q, k_new, v_new = _project_qkv(params, cfg, x, x)
+    pos = jnp.asarray(pos)
+    vec = pos.ndim == 1                     # per-row positions
     if cfg.pos_emb == "rope":
-        pos_arr = jnp.asarray(pos)[None]
+        pos_arr = pos[:, None] if vec else pos[None]
         q = apply_rope(q, pos_arr, cfg.rope_theta)
         k_new = apply_rope(k_new, pos_arr, cfg.rope_theta)
 
     cap = cache["k"].shape[1]
     window = _window(cfg, kind)
     slot = jnp.mod(pos, cap) if window else pos
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
-
-    # position held by each cache slot (ring-buffer aware)
-    idx = jnp.arange(cap)
-    if window:
-        slot_pos = pos - jnp.mod(pos - idx, cap)
+    if vec:
+        upd = lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(  # noqa: E731
+            c, n, s, axis=0)
+        k = jax.vmap(upd)(cache["k"], k_new, slot)
+        v = jax.vmap(upd)(cache["v"], v_new, slot)
     else:
-        slot_pos = idx
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot,
+                                                axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot,
+                                                axis=1)
+
+    # position held by each cache slot (ring-buffer aware); with per-row
+    # pos every quantity gains a leading batch axis
+    idx = jnp.arange(cap)
+    rpos = pos[:, None] if vec else pos
     if window:
-        valid &= pos - slot_pos < window
+        slot_pos = rpos - jnp.mod(rpos - idx, cap)
+    else:
+        slot_pos = jnp.broadcast_to(idx, (x.shape[0], cap)) if vec else idx
+    valid = (slot_pos >= 0) & (slot_pos <= rpos)
+    if window:
+        valid &= rpos - slot_pos < window
 
     impl = impl or cfg.attn_impl
     if impl in ("kernel", "pallas"):
@@ -373,7 +388,7 @@ def attn_decode(params, x, cache, *, cfg, kind, pos, impl=None):
         from repro.kernels import ops as kops
         o = kops.decode_attention(
             q[:, 0], k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
-            slot_pos.astype(jnp.int32), jnp.asarray(pos, jnp.int32),
+            slot_pos.astype(jnp.int32), pos.astype(jnp.int32),
             scale=_scale(cfg), softcap=cfg.attn_logit_softcap or 0.0,
             window=window, block_k=_divisor_block(cap, 128))
         return _out_proj(params, cfg, o[:, None]), {"k": k, "v": v}
@@ -390,7 +405,9 @@ def attn_decode(params, x, cache, *, cfg, kind, pos, impl=None):
                    preferred_element_type=jnp.float32) * _scale(cfg)
     if cfg.attn_logit_softcap:
         s = softcap(s, cfg.attn_logit_softcap)
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    vmask = (valid[:, None, None, None, :] if vec
+             else valid[None, None, None, None, :])
+    s = jnp.where(vmask, s, NEG_INF)
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
     o = jnp.einsum("bkgqt,btkh->bqkgh", p.astype(q.dtype), v,
                    preferred_element_type=jnp.float32).astype(q.dtype)

@@ -153,14 +153,16 @@ def prefill(params, tokens, *, cfg, vision=None, impl=None, cache_seq_len):
 def decode_step(params, tokens, cache, pos, *, cfg, unroll=False,
                 impl=None):
     """One-token decode. tokens: (B,1) int32; pos: scalar int32 (position of
-    this token). Returns (hidden (B,1,d), new_cache).
+    this token; lockstep decode) or (B,) int32 (per-slot positions — the
+    continuous-batching serve path). Returns (hidden (B,1,d), new_cache).
 
     unroll=True (the production serve path): a static Python loop over
     groups with per-layer in-place cache writes — lax.scan would carry the
     whole cache as xs/ys and double-buffer it (2x cache HBM); the unrolled
     form lets XLA alias the donated cache buffer layer by layer.
     """
-    x = _embed(params, cfg, tokens, jnp.asarray(pos)[None])
+    pos = jnp.asarray(pos)
+    x = _embed(params, cfg, tokens, pos[:, None] if pos.ndim else pos[None])
 
     def body(x, block_params, cache_slice):
         x, nc = blocks.block_decode(block_params, x, cache_slice["block"],

@@ -186,9 +186,8 @@ def test_lm_pretrain_loss_parity_kernel(arch):
         rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)}
         for _ in range(3)]
 
-    def losses(cfg, attn_impl):
-        step = jax.jit(L.make_lm_pretrain_step(cfg, opt, loss_chunk=S,
-                                               attn_impl=attn_impl))
+    def losses(cfg):
+        step = jax.jit(L.make_lm_pretrain_step(cfg, opt, loss_chunk=S))
         params, opt_state = params0, opt.init(params0)
         out = []
         for s, b in enumerate(batches):
@@ -196,8 +195,8 @@ def test_lm_pretrain_loss_parity_kernel(arch):
             out.append(float(m["loss"]))
         return out
 
-    l_ref = losses(cfg, "xla")
-    l_k = losses(_kernel_cfg(cfg), "kernel")
+    l_ref = losses(dataclasses.replace(cfg, attn_impl="xla"))
+    l_k = losses(_kernel_cfg(cfg))
     np.testing.assert_allclose(l_ref, l_k, **TOL)
 
 
@@ -206,6 +205,8 @@ def test_lm_pretrain_loss_parity_kernel(arch):
 # ---------------------------------------------------------------------------
 
 _MESH_KERNEL_SCRIPT = r"""
+import dataclasses
+
 import jax, jax.numpy as jnp
 import numpy as np
 
@@ -232,6 +233,7 @@ batches = [{"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
 
 
 def losses(mesh, attn_impl, carry):
+    icfg = dataclasses.replace(cfg, attn_impl=attn_impl)
     if mesh is None:
         params, gc, rules = params0, None, None
     else:
@@ -240,9 +242,9 @@ def losses(mesh, attn_impl, carry):
         gc = lambda g: jax.tree.map(jax.lax.with_sharding_constraint, g,
                                     pshard)
         params = jax.device_put(params0, pshard)
-    step = jax.jit(L.make_lm_pretrain_step(cfg, opt, loss_chunk=S,
+    step = jax.jit(L.make_lm_pretrain_step(icfg, opt, loss_chunk=S,
                                            grad_constraint=gc, mesh=mesh,
-                                           rules=rules, attn_impl=attn_impl))
+                                           rules=rules))
     opt_state0 = opt.init(params)
     opt_state, out = opt_state0, []
     for s, b in enumerate(batches):

@@ -1,0 +1,212 @@
+"""DecodeSession / continuous-batching server contract tests.
+
+The load-bearing guarantees of the serving redesign:
+  * a single-request continuous server is BITWISE-identical to
+    ``core.generate.generate`` with the same seed,
+  * admission/eviction of neighbours never perturbs a surviving slot,
+  * slot recycling never leaks KV state across tenants,
+  * per-request max_tokens / temperature / stop_token are honoured,
+  * ImplContext folds the CLI impl flags into the config exactly once.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.configs.base import ImplContext
+from repro.core import generate as G
+from repro.launch.serve import Server
+from repro.models import model as model_lib
+
+P, N = 4, 8   # prompt length (on the bucket ladder), generation budget
+
+
+@pytest.fixture(scope="module", params=["qwen3-4b", "xlstm-125m"])
+def setup(request):
+    cfg = get_reduced_config(request.param)
+    params, _ = model_lib.init(jax.random.PRNGKey(0), cfg)
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (1, P), 0, cfg.vocab_size))
+    key = jax.random.PRNGKey(7)
+    ref = jax.tree.map(np.asarray,
+                       G.generate(params, jnp.asarray(prompt), key,
+                                  cfg=cfg, num_steps=N))
+    return cfg, params, prompt, key, ref
+
+
+def _run_session(sess, slot, prompt, key, n):
+    out0 = sess.prefill_into(slot, prompt, key=key)
+    toks, lps = [out0["token"]], [out0["logprob"]]
+    for _ in range(n - 1):
+        o = sess.step()
+        toks.append(o["token"][slot])
+        lps.append(o["logprob"][slot])
+    return np.asarray(toks), np.asarray(lps)
+
+
+def test_single_request_bitwise_parity_with_generate(setup):
+    """Server (max_batch=1) vs generate(): identical tokens AND logprobs,
+    bitwise — both run the same compiled session functions."""
+    cfg, params, prompt, key, ref = setup
+    k0 = np.asarray(jax.random.split(key, 1)[0])
+    server = Server(cfg, params, max_batch=1, max_len=P + N).start()
+    try:
+        h = server.submit(prompt[0], max_tokens=N, key=k0)
+        tokens = h.result(timeout=300)
+    finally:
+        server.stop()
+    np.testing.assert_array_equal(tokens, ref["tokens"][0])
+
+
+def test_admission_eviction_preserves_survivors(setup):
+    """A slot's stream is a pure function of its own (prompt, key): bitwise
+    equal to the same slot decoding ALONE in an identically-shaped session,
+    while neighbours are admitted, evicted and re-admitted around it."""
+    cfg, params, prompt, key, ref = setup
+    k0 = np.asarray(jax.random.split(key, 1)[0])
+
+    solo = G.DecodeSession(params, cfg, max_batch=4, max_len=P + N)
+    want_t, want_lp = _run_session(solo, 2, prompt[0], k0, N)
+
+    sess = G.DecodeSession(params, cfg, max_batch=4, max_len=P + N)
+    rng = np.random.default_rng(0)
+    out0 = sess.prefill_into(2, prompt[0], key=k0)
+    toks, lps = [out0["token"]], [out0["logprob"]]
+    sess.prefill_into(0, rng.integers(0, cfg.vocab_size, size=3),
+                      key=np.asarray(jax.random.PRNGKey(11)),
+                      temperature=0.7)
+    for i in range(N - 1):
+        if i == 2:
+            sess.evict(0)
+        if i == 4:   # recycle the freed slot mid-flight
+            sess.prefill_into(0, rng.integers(0, cfg.vocab_size, size=2),
+                              key=np.asarray(jax.random.PRNGKey(13)))
+        o = sess.step()
+        toks.append(o["token"][2])
+        lps.append(o["logprob"][2])
+    np.testing.assert_array_equal(np.asarray(toks), want_t)
+    np.testing.assert_array_equal(np.asarray(lps), want_lp)
+    # token stream also matches the B=1 generate() reference
+    np.testing.assert_array_equal(np.asarray(toks), ref["tokens"][0, P:])
+
+
+def test_slot_recycling_never_leaks_kv(setup):
+    """Tenant B in a recycled slot decodes exactly as in a fresh session —
+    nothing of tenant A's KV/RNG/position state survives admission."""
+    cfg, params, prompt, key, ref = setup
+    kb = np.asarray(jax.random.PRNGKey(21))
+    prompt_b = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(22), (P,), 0, cfg.vocab_size))
+
+    fresh = G.DecodeSession(params, cfg, max_batch=1, max_len=P + N)
+    want_t, want_lp = _run_session(fresh, 0, prompt_b, kb, N)
+
+    recycled = G.DecodeSession(params, cfg, max_batch=1, max_len=P + N)
+    _run_session(recycled, 0, prompt[0],
+                 np.asarray(jax.random.split(key, 1)[0]), N)
+    recycled.evict(0)
+    got_t, got_lp = _run_session(recycled, 0, prompt_b, kb, N)
+    np.testing.assert_array_equal(got_t, want_t)
+    np.testing.assert_array_equal(got_lp, want_lp)
+
+
+def test_per_request_budget_and_stop_token(setup):
+    """max_tokens truncates to a prefix of the full stream; stop_token ends
+    the request the moment it is sampled (stop included in the result)."""
+    cfg, params, prompt, key, ref = setup
+    k0 = np.asarray(jax.random.split(key, 1)[0])
+    full = ref["tokens"][0, P:]
+    stop = int(full[2])
+    server = Server(cfg, params, max_batch=2, max_len=P + N).start()
+    try:
+        h_budget = server.submit(prompt[0], max_tokens=3, key=k0)
+        h_stop = server.submit(prompt[0], max_tokens=N, stop_token=stop,
+                               key=k0)
+        np.testing.assert_array_equal(h_budget.result(timeout=300)[P:],
+                                      full[:3])
+        np.testing.assert_array_equal(h_stop.result(timeout=300)[P:],
+                                      full[:3])
+    finally:
+        server.stop()
+
+
+def test_static_and_continuous_agree_per_request():
+    """Streams are request-local, so the scheduling policy must not change
+    any request's tokens — only the step count (continuous admits into
+    freed slots instead of waiting for the whole batch)."""
+    cfg = get_reduced_config("qwen3-4b")
+    params, _ = model_lib.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(rng.integers(1, 6)))
+               for _ in range(5)]
+    keys = [np.asarray(jax.random.PRNGKey(100 + i)) for i in range(5)]
+    budgets = [1 + i for i in range(5)]
+
+    def run(policy):
+        server = Server(cfg, params, max_batch=2, max_len=16,
+                        policy=policy).start()
+        try:
+            hs = [server.submit(p, max_tokens=n, key=k)
+                  for p, n, k in zip(prompts, budgets, keys)]
+            return [h.result(timeout=300) for h in hs], server.steps
+        finally:
+            server.stop()
+
+    cont, cont_steps = run("continuous")
+    stat, stat_steps = run("static")
+    for a, b in zip(cont, stat):
+        np.testing.assert_array_equal(a, b)
+    assert cont_steps <= stat_steps
+
+
+def test_temperature_changes_stream_deterministically():
+    cfg = get_reduced_config("qwen3-4b")
+    params, _ = model_lib.init(jax.random.PRNGKey(0), cfg)
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (P,), 0, cfg.vocab_size))
+    k = np.asarray(jax.random.PRNGKey(5))
+
+    def run(temp):
+        sess = G.DecodeSession(params, cfg, max_batch=1, max_len=P + N)
+        out0 = sess.prefill_into(0, prompt, key=k, temperature=temp)
+        toks = [out0["token"]]
+        for _ in range(N - 1):
+            toks.append(sess.step()["token"][0])
+        return np.asarray(toks)
+
+    np.testing.assert_array_equal(run(0.5), run(0.5))
+    # greedy-ish vs hot sampling must diverge for an untrained model
+    assert not np.array_equal(run(0.05), run(5.0))
+
+
+# ---------------------------------------------------------------------------
+# ImplContext + prefill bucketing
+# ---------------------------------------------------------------------------
+
+def test_impl_context_resolves_once_at_the_boundary():
+    cfg = get_reduced_config("qwen3-4b")
+    ns = argparse.Namespace(attn_impl="kernel", ssd_impl=None)
+    out = ImplContext.from_args(ns).apply(cfg)
+    assert out.attn_impl == "kernel"
+    assert out.ssd_impl == cfg.ssd_impl          # None field: keep config
+    assert ImplContext().apply(cfg) is cfg       # no-op returns same cfg
+    both = ImplContext(attn="xla", ssd="kernel").apply(cfg)
+    assert (both.attn_impl, both.ssd_impl) == ("xla", "kernel")
+
+
+def test_prefill_len_bucketing_rules():
+    full = get_reduced_config("qwen3-4b")         # full causal attention
+    assert G.prefill_len(full, 5, 64) == 8        # ladder pad
+    assert G.prefill_len(full, 100, 64) == 64     # clamp to capacity
+    rec = get_reduced_config("xlstm-125m")        # recurrent: exact
+    assert rec.is_recurrent
+    assert G.prefill_len(rec, 5, 64) == 5
+    win = dataclasses.replace(
+        full, block_pattern=(("swa_attn", "swiglu"),), sliding_window=4)
+    assert G.prefill_len(win, 3, 64) == 4         # bucket within the window
+    assert G.prefill_len(win, 5, 64) == 5         # bucket 8 > window: exact

@@ -52,31 +52,29 @@ def test_train_cli_lm_rl(capsys):
 
 
 def test_serve_server_roundtrip():
+    """Request-handle API: concurrent submits with per-request budgets all
+    complete, echo their prompts, and respect max_tokens/stop gating."""
     from repro.configs import get_reduced_config
     from repro.launch.serve import Server
     from repro.models import model as M
     cfg = get_reduced_config("xlstm-125m")
     params, _ = M.init(jax.random.PRNGKey(0), cfg)
-    server = Server(cfg, params, gen_tokens=6, max_batch=4, timeout_ms=5)
-    server.start()
+    server = Server(cfg, params, max_batch=4, max_len=16,
+                    default_max_tokens=6).start()
     try:
         rng = np.random.default_rng(0)
         prompts = rng.integers(0, cfg.vocab_size, size=(5, 7))
-        import threading
-        results = {}
-
-        def client(i):
-            results[i] = server.submit(prompts[i])
-
-        ts = [threading.Thread(target=client, args=(i,)) for i in range(5)]
-        for t in ts:
-            t.start()
-        for t in ts:
-            t.join(timeout=120)
-        assert len(results) == 5
-        for i in range(5):
-            assert results[i].shape == (13,)
-            np.testing.assert_array_equal(results[i][:7], prompts[i])
+        handles = [server.submit(prompts[i],
+                                 max_tokens=3 + i % 3,
+                                 temperature=0.5 + 0.25 * i)
+                   for i in range(5)]
+        results = [h.result(timeout=120) for h in handles]
+        for i, (h, r) in enumerate(zip(handles, results)):
+            assert h.done()
+            assert r.shape == (7 + 3 + i % 3,)
+            np.testing.assert_array_equal(r[:7], prompts[i])
+            assert h.t_done >= h.t_first >= h.t_submit
+        assert server.served == 5
     finally:
         server.stop()
 
