@@ -1,0 +1,50 @@
+"""Static trace/kernel/concurrency auditor (``python -m repro.analysis``).
+
+Gates the contracts CPU CI cannot execute: Pallas launch geometry and
+VMEM budgets (``kernel_audit``), jit-cache/donation/sharding-axis
+behavior (``trace_audit``), and thread-safety/host-sync discipline
+(``concurrency_lint``). All three run by abstract evaluation or AST
+inspection — no TPU, no FLOPs. Unwaived findings fail the CLI nonzero;
+waive with an inline ``# analysis: ignore[rule]`` on the flagged line.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.analysis.common import Finding, apply_waivers
+from repro.analysis.concurrency_lint import lint_tree
+from repro.analysis.kernel_audit import (SMEM_BUDGET_BYTES,
+                                         VMEM_BUDGET_BYTES, audit_kernels)
+from repro.analysis.trace_audit import audit_traces
+
+__all__ = ["Finding", "apply_waivers", "audit_kernels", "audit_traces",
+           "lint_tree", "run_all", "SMEM_BUDGET_BYTES",
+           "VMEM_BUDGET_BYTES"]
+
+
+def run_all(*, vmem_budget: int = VMEM_BUDGET_BYTES,
+            smem_budget: int = SMEM_BUDGET_BYTES,
+            archs=None) -> Tuple[List[Finding], Dict]:
+    """Run every analyzer; returns (waiver-resolved findings, report)."""
+    from repro.kernels.compat import resolve_interpret
+
+    kernel_findings, kernel_tables = audit_kernels(
+        archs, vmem_budget=vmem_budget, smem_budget=smem_budget)
+    trace_findings, trace_summaries = audit_traces(archs=archs)
+    lint_findings = lint_tree()
+
+    findings = apply_waivers(
+        kernel_findings + trace_findings + lint_findings)
+    unwaived = [f for f in findings if not f.waived]
+    report = {
+        "kernel_tables": kernel_tables,
+        "trace_summaries": trace_summaries,
+        "interpret_stats": resolve_interpret.stats(),
+        "findings": [f.to_dict() for f in findings],
+        "num_findings": len(findings),
+        "num_unwaived": len(unwaived),
+        "vmem_budget_bytes": vmem_budget,
+        "smem_budget_bytes": smem_budget,
+    }
+    return findings, report

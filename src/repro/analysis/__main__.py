@@ -1,0 +1,67 @@
+"""CLI: ``python -m repro.analysis --report analysis_report.json``.
+
+Exits 0 iff no unwaived findings; the JSON report carries the per-kernel
+VMEM footprint tables (joined with roofline FLOPs), the per-entry trace
+summaries, and every finding (waived ones included, marked)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static trace/kernel/concurrency audit")
+    parser.add_argument("--report", default=None, metavar="PATH",
+                        help="write the full JSON report here")
+    parser.add_argument("--vmem-budget-mb", type=float, default=16.0,
+                        help="per-core VMEM budget (default 16 MB/v5e)")
+    parser.add_argument("--smem-budget-kb", type=float, default=256.0,
+                        help="SMEM budget (default 256 KB)")
+    parser.add_argument("--archs", default=None,
+                        help="comma-separated arch subset (default: all)")
+    args = parser.parse_args(argv)
+
+    from repro.analysis import run_all
+
+    findings, report = run_all(
+        vmem_budget=int(args.vmem_budget_mb * 1024 * 1024),
+        smem_budget=int(args.smem_budget_kb * 1024),
+        archs=args.archs.split(",") if args.archs else None)
+
+    print(f"kernel launches audited: {len(report['kernel_tables'])}")
+    for row in report["kernel_tables"]:
+        print(f"  {row['kernel']:<16} {row['arch']:<14} "
+              f"{row['shape']:<10} grid={tuple(row['grid'])!s:<16} "
+              f"vmem={row['vmem_total_bytes'] / 2**20:6.2f} MiB  "
+              f"smem={row['smem_bytes']:>5} B  "
+              f"flops={row['roofline']['flops']:.3g}")
+    print(f"trace entries audited: {len(report['trace_summaries'])}")
+    for row in report["trace_summaries"]:
+        axes = ",".join(row.get("constraint_axes", [])) or "-"
+        print(f"  {row['entry']:<34} traces={row.get('traces', '?')} "
+              f"donated={row.get('donated_argnums', [])} axes={axes}")
+    stats = report["interpret_stats"]
+    if stats.get("fallbacks"):
+        print(f"interpret fallbacks this run: {stats['fallbacks']}")
+
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"report written to {args.report}")
+
+    waived = [f for f in findings if f.waived]
+    unwaived = [f for f in findings if not f.waived]
+    for f in waived:
+        print(f"WAIVED  {f}")
+    for f in unwaived:
+        print(f"FAIL    {f}")
+    print(f"{len(unwaived)} unwaived finding(s), {len(waived)} waived")
+    return 1 if unwaived else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,9 +15,8 @@ Atari case). The compiled alternative is core/rollout.py (DESIGN.md §1).
 from __future__ import annotations
 
 import threading
-from typing import Callable, List, Optional
+from typing import Callable, List
 
-import jax
 import numpy as np
 
 from repro.core.batcher import BatchingQueue, Closed, DynamicBatcher

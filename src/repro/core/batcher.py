@@ -18,7 +18,7 @@ fixed-shape TPU step doesn't recompile per batch size (DESIGN.md §8.4).
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -95,7 +95,6 @@ class DynamicBatcher:
         """Called by the consumer. Returns (batched_inputs, respond, size) or
         None on timeout / raises Closed when closed and drained."""
         with self._cond:
-            deadline = None
             while not self._pending:
                 if self._closed:
                     raise Closed
@@ -162,7 +161,7 @@ class BatchingQueue:
 
     def get(self, timeout: Optional[float] = None):
         with self._cond:
-            ok = self._cond.wait_for(
+            self._cond.wait_for(
                 lambda: len(self._items) >= self.batch_size or self._closed,
                 timeout=timeout)
             if len(self._items) >= self.batch_size:

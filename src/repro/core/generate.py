@@ -65,8 +65,10 @@ def _session_prefill(params, prompt, keys, temp, *, cfg, cache_seq_len,
     """Prefill every row and sample its first token.
 
     prompt (B, P) int32 (may be right-padded; ``last_index`` = index of the
-    true last token, default P-1). Returns (state, out) where ``out`` holds
-    the FIRST sampled token per row, aligned with ``_session_step``'s.
+    true last token — scalar shared by every row, or a (B,) array of
+    per-row lengths-1, default P-1). Returns (state, out) where ``out``
+    holds the FIRST sampled token per row, aligned with
+    ``_session_step``'s.
     """
     b, p = prompt.shape
     hidden, _, cache = model_lib.prefill(params, prompt, cfg=cfg,
@@ -76,8 +78,12 @@ def _session_prefill(params, prompt, keys, temp, *, cfg, cache_seq_len,
         h_last = hidden[:, -1:]
         pos0 = jnp.full((b,), p, jnp.int32)
     else:
-        h_last = jax.lax.dynamic_slice_in_dim(hidden, last_index, 1, axis=1)
-        pos0 = jnp.full((b,), 0, jnp.int32) + (last_index + 1)
+        li = jnp.asarray(last_index)
+        if li.ndim == 0:            # one shared true length
+            h_last = jax.lax.dynamic_slice_in_dim(hidden, li, 1, axis=1)
+        else:                       # per-row true lengths (batched admit)
+            h_last = jnp.take_along_axis(hidden, li[:, None, None], axis=1)
+        pos0 = jnp.full((b,), 0, jnp.int32) + (li + 1).astype(jnp.int32)
     logits0 = model_lib.logits_from_hidden(params, cfg, h_last)
     base0 = model_lib.baseline_from_hidden(params, cfg, h_last)
     keys, use = _split_rows(keys)
@@ -179,6 +185,30 @@ class _SessionFns:
             }
             return new_state, out
 
+        def admit_many(params, state, prompts, lengths, slots, keys,
+                       temps, cache_seq_len):
+            """Prefill N requests in ONE dispatch (prompts (N, Pb) padded
+            to a shared bucket, true lengths (N,)) and scatter them into
+            batch rows ``slots`` ((N,) int32, no duplicates): the same
+            full-row overwrite as ``admit``, vectorized."""
+            with _ctx():
+                rows, out = _session_prefill(
+                    params, prompts, keys, temps, cfg=cfg,
+                    cache_seq_len=cache_seq_len, last_index=lengths - 1)
+            new_cache = jax.tree.map(
+                lambda full, r: full.at[:, slots].set(
+                    r.astype(full.dtype)),
+                state["cache"], rows["cache"])
+            new_state = {
+                "cache": new_cache,
+                "pos": state["pos"].at[slots].set(lengths),
+                "last": state["last"].at[slots].set(rows["last"]),
+                "keys": state["keys"].at[slots].set(rows["keys"]),
+                "temp": state["temp"].at[slots].set(temps),
+                "active": state["active"].at[slots].set(True),
+            }
+            return new_state, out
+
         def evict(state, slot):
             return dict(state, active=state["active"].at[slot].set(False))
 
@@ -187,6 +217,9 @@ class _SessionFns:
         self.step = jax.jit(step, donate_argnums=(1,))
         self.admit = jax.jit(admit, static_argnames=("cache_seq_len",),
                              donate_argnums=(1,))
+        self.admit_many = jax.jit(admit_many,
+                                  static_argnames=("cache_seq_len",),
+                                  donate_argnums=(1,))
         self.evict = jax.jit(evict, donate_argnums=(0,))
 
 
@@ -233,6 +266,8 @@ class DecodeSession:
     (``core.sources.GeneratorSource``) both drive this API:
 
       prefill_into(slot, prompt, key=...) -> first-token dict for the slot
+      prefill_many(slots, prompts, ...)   -> batched admit: one dispatch
+                                             per shared prefill bucket
       step()                              -> per-slot dict for one token
       evict(slot)                         -> frees the slot
 
@@ -313,6 +348,64 @@ class DecodeSession:
             jnp.float32(temperature), cache_seq_len=self.max_len)
         self._active[slot] = True
         return {k: np.asarray(v)[0] for k, v in out.items()}
+
+    def prefill_many(self, slots, prompts, *, keys,
+                     temperature=1.0) -> list:
+        """Admit N requests batched: ONE compiled dispatch per shared
+        prefill bucket (one total when every prompt pads to the same
+        bucket — e.g. the GeneratorSource's single-token episode resets)
+        instead of one per slot.
+
+        slots: N slot indices (unique, all free). prompts: N 1-D int32
+        prompt arrays (ragged ok). keys: N PRNG keys. temperature: scalar
+        or N floats. Returns a list of N per-slot first-token dicts, in
+        ``slots`` order — each identical to what ``prefill_into`` returns
+        for that (prompt, key, temperature).
+        """
+        slots = [int(s) for s in slots]
+        n = len(slots)
+        if len(set(slots)) != n:
+            raise ValueError(f"duplicate slots in batched admit: {slots}")
+        occupied = [s for s in slots if self._active[s]]
+        if occupied:
+            raise ValueError(f"slots {occupied} are occupied (evict first)")
+        prompts = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+        if len(prompts) != n:
+            raise ValueError(f"{n} slots but {len(prompts)} prompts")
+        for p in prompts:
+            if not 0 < p.shape[0] < self.max_len:
+                raise ValueError(f"prompt length {p.shape[0]} not in "
+                                 f"[1, {self.max_len})")
+        keys = [np.asarray(k, np.uint32).reshape(2) for k in keys]
+        temps = np.broadcast_to(
+            np.asarray(temperature, np.float32), (n,))
+
+        # group by prefill bucket: each group is one compiled dispatch
+        groups: Dict[int, list] = {}
+        for i, p in enumerate(prompts):
+            pb = prefill_len(self.cfg, p.shape[0], self.max_len)
+            groups.setdefault(pb, []).append(i)
+
+        results: list = [None] * n
+        for pb, idxs in groups.items():
+            g = len(idxs)
+            padded = np.zeros((g, pb), np.int32)
+            lengths = np.empty((g,), np.int32)
+            for row, i in enumerate(idxs):
+                p = prompts[i]
+                padded[row, :p.shape[0]] = p
+                lengths[row] = p.shape[0]
+            self._state, out = self._fns.admit_many(
+                self._params, self._state, jnp.asarray(padded),
+                jnp.asarray(lengths),
+                jnp.asarray([slots[i] for i in idxs], jnp.int32),
+                jnp.asarray(np.stack([keys[i] for i in idxs])),
+                jnp.asarray(temps[idxs]), cache_seq_len=self.max_len)
+            host = {k: np.asarray(v) for k, v in out.items()}
+            for row, i in enumerate(idxs):
+                self._active[slots[i]] = True
+                results[i] = {k: v[row] for k, v in host.items()}
+        return results
 
     def step(self) -> Dict[str, np.ndarray]:
         """Advance every active slot one token. Returns per-slot arrays

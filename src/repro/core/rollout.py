@@ -13,7 +13,7 @@ identical for host-loop and on-device actors.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

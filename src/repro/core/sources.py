@@ -811,9 +811,10 @@ class GeneratorSource:
         sess = self._get_session(params)
         keys = jax.random.split(k_gen, b)
         prompt_np = np.asarray(prompt)
-        first = [sess.prefill_into(i, prompt_np[i], key=keys[i],
-                                   temperature=self._temperature)
-                 for i in range(b)]
+        # batched admit: every episode reset is ONE device dispatch (the
+        # prompts share a prefill bucket), not one per slot
+        first = sess.prefill_many(range(b), list(prompt_np), keys=keys,
+                                  temperature=self._temperature)
         toks = [[f["token"] for f in first]]          # time-major lists
         lps = [[f["logprob"] for f in first]]
         for _ in range(t - 1):

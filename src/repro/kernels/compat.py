@@ -9,7 +9,7 @@ from jax.experimental.pallas import tpu as pltpu
 CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
 
-_warned = False
+_stats = {"explicit": 0, "compiled": 0, "fallbacks": 0}
 
 
 def resolve_interpret(interpret=None):
@@ -19,18 +19,34 @@ def resolve_interpret(interpret=None):
     interpret mode elsewhere — the kernels target Mosaic-TPU, and
     interpret mode executes the same kernel body under the CPU/GPU
     backend so the ``kernel`` impls stay runnable (and parity-testable)
-    in CI. The fallback warns ONCE per process; callers no longer plumb
-    ``interpret=`` flags by hand.
+    in CI. The fallback warns once per process, and every resolution is
+    counted: ``resolve_interpret.stats()`` lets tests and the static
+    auditor assert that no path which requested ``impl=kernel`` fell
+    back to interpret mode *silently*.
     """
-    global _warned
     if interpret is not None:
+        _stats["explicit"] += 1
         return interpret
     if jax.default_backend() == "tpu":
+        _stats["compiled"] += 1
         return False
-    if not _warned:
-        _warned = True
+    if _stats["fallbacks"] == 0:
         warnings.warn(
             "Pallas kernels: no TPU backend detected "
             f"({jax.default_backend()}); running in interpret mode "
             "(slow, validation only).", stacklevel=2)
+    _stats["fallbacks"] += 1
     return True
+
+
+def _stats_snapshot():
+    return dict(_stats)
+
+
+def _stats_reset():
+    for k in _stats:
+        _stats[k] = 0
+
+
+resolve_interpret.stats = _stats_snapshot
+resolve_interpret.reset_stats = _stats_reset

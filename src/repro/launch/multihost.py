@@ -53,7 +53,6 @@ def main(argv=None):
 
     jax = bootstrap(args.coordinator, args.num_processes, args.process_id)
 
-    from repro.configs.base import INPUT_SHAPES
     from repro.distributed.sharding import RULE_SETS
     from repro.launch import mesh as mesh_lib
     from repro.launch.dryrun import resolve_rules

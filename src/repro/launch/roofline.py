@@ -20,8 +20,6 @@ separately so the measured/modelled split stays visible.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Dict
 
 import jax

@@ -11,8 +11,6 @@ config end-to-end (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -148,8 +146,6 @@ def build_train(arch: str, shape_name, mesh, rules,
 
     params, axes = abstract_params(cfg, mesh, rules)
     opt_shapes = jax.eval_shape(opt.init, params)
-    opt_axes = {k: jax.tree.map(lambda _: None, v) for k, v in
-                opt_shapes.items()}
     # ZeRO-1: optimizer state also sharded over the data axes
     opt_shardings = {k: shd.zero1_shardings(axes, opt_shapes[k], mesh, rules)
                      for k in opt_shapes}

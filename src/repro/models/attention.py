@@ -13,14 +13,11 @@ Shape conventions:
 from __future__ import annotations
 
 import numpy as np
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.ops import NEG_INF  # shared fp32 mask constant
-from repro.models.common import (AxisParam, apply_rope, dense, param,
-                                 rmsnorm, softcap)
+from repro.models.common import apply_rope, param, softcap
 
 
 # ---------------------------------------------------------------------------

@@ -8,13 +8,10 @@ All params are AxisParam trees at init; call ``common.split_params`` to get
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention, blocks
+from repro.models import blocks
 from repro.models.common import (make_norm, param, sinusoidal_pos_emb,
                                  softcap, split_params, stack_init)
 

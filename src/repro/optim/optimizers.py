@@ -12,7 +12,7 @@ drivers. Gradient clipping is global-norm (IMPALA: 40).
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 
 def test_impala_deep_resnet_forward():

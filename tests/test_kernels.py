@@ -154,7 +154,6 @@ def test_ssd_chunk_matches_model_mamba():
     d_in = cfg.ssm_expand * cfg.d_model
     nh = d_in // cfg.ssm_head_dim
     n_ = cfg.ssm_state
-    z = x @ params["in_proj_z"]
     xs = x @ params["in_proj_x"]
     bc = x @ params["in_proj_bc"]
     dt = jax.nn.softplus(x @ params["in_proj_dt"] + params["dt_bias"])

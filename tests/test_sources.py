@@ -7,7 +7,6 @@ the parameters do not move (parameter lag 0)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.atari_impala import small_train
 from repro.core import learner as learner_lib

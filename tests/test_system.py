@@ -6,7 +6,6 @@ behavior-consistent with the model."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_reduced_config
 from repro.configs.atari_impala import small_train
