@@ -1,2 +1,8 @@
-from repro.checkpoint.checkpoint import (latest_step_path, restore,  # noqa: F401
-                                         restore_structured, save)
+from repro.checkpoint.checkpoint import (MANIFEST, is_complete,  # noqa: F401
+                                         latest_step_path, load_flat,
+                                         read_metadata, restore,
+                                         restore_structured, save,
+                                         saved_shardings, snapshot,
+                                         write_snapshot)
+from repro.checkpoint.writer import (AsyncCheckpointWriter,  # noqa: F401
+                                     CheckpointWriteError)

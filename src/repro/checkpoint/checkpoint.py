@@ -1,46 +1,77 @@
-"""Pytree checkpointing to .npz (no orbax in the container).
+"""Sharded manifest checkpoints (no orbax in the container).
 
-Flattens the (params, opt_state, step, ...) tree with '/'-joined key paths;
-restores into the same structure. Atomic via write-to-temp + rename.
+A checkpoint is a DIRECTORY, written cooperatively by every process of a
+(possibly multi-host) run:
 
-Two layers:
+    step_40/
+      shard-00000.npz    per-process arrays: the addressable replica-0
+      shard-00001.npz    shards of every learner-tree leaf, plus that
+      ...                process's structured (source) state
+      shard-00000.json   per-process sidecar: shard index/shape/dtype per
+      ...                leaf, structured schema, metadata
+      manifest.json      merged by process 0 AFTER a cross-process
+                         barrier — the COMPLETION MARKER
 
-* ``save``/``restore`` — fixed-structure trees (params/opt_state), restored
-  into a ``like`` template. This is the learner-state path.
-* ``structured=``/``restore_structured`` — SELF-DESCRIBING trees whose shape
-  is only known at save time (RolloutSource ``state_dict()``s: env carries,
-  RNG streams, replay-buffer slots, in-flight rollouts — any nesting of
-  dict/list/tuple/None/scalar/array). The structure rides along as a JSON
-  schema in the same .npz, so ``restore_structured`` needs no template and
-  checkpoints written before a source grew state restore cleanly (returns
-  ``None``).
+Each process writes only the shards its devices actually hold
+(``addressable_shards`` with ``replica_id == 0``, so every unique piece of
+data is written exactly once across the fleet), records their global index
+in its sidecar, and process 0 merges the sidecars into ``manifest.json``
+once every process has landed its files. All file writes are
+write-to-temp + ``os.replace``, and readers treat a step directory
+without ``manifest.json`` as nonexistent — a SIGKILL at ANY point during
+a save leaves the previous checkpoint as the latest restorable one.
+
+``restore(..., shardings=)`` reassembles leaves straight onto a mesh via
+``jax.make_array_from_single_device_arrays`` — and the target mesh does
+NOT have to match the saved one (**elastic resume**): each target shard
+is assembled from whichever saved shards overlap its index, so a run
+checkpointed on ``("data","model") = (2, 2)`` restores onto ``(4, 1)``
+(or onto a different process count) by resharding from the manifest.
+
+Two content layers, as before:
+
+* ``save``/``restore`` — fixed-structure trees (params/opt_state),
+  restored into a ``like`` template. This is the learner-state path.
+* ``structured=``/``restore_structured`` — SELF-DESCRIBING, per-process
+  trees whose shape is only known at save time (RolloutSource
+  ``state_dict()``s: env carries, RNG streams, replay slots — any nesting
+  of dict/list/tuple/None/scalar/array). Each process saves and restores
+  its own; on a process-count change the learner state still restores
+  (it reshards) but source state comes back ``None`` and the source
+  starts fresh.
+
+The snapshot/write split (``snapshot()`` -> ``write_snapshot()``) is what
+moves checkpointing off the hot path: ``snapshot`` synchronously copies
+every addressable shard to host memory (the only part that must see a
+consistent device state), and ``write_snapshot`` — all the disk I/O and
+the cross-process barrier — runs wherever the caller likes, e.g. the
+background thread of ``checkpoint.writer.AsyncCheckpointWriter``.
+
+Legacy single-file ``step_N.npz`` checkpoints (pre-manifest) still
+restore through every read API.
 """
 
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import tempfile
-from typing import Any, Dict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+MANIFEST = "manifest.json"
+_FORMAT = 2
+_SCHEMA_KEY = "__structured_schema__"      # legacy npz layout
+_STRUCT_PREFIX = "__structured__/"
 
-def _flatten(tree) -> Dict[str, Any]:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(_key_str(k) for k in path)
-        # np.asarray gathers model-sharded jax.Arrays to host — correct on
-        # a single process; a multi-host global array has shards this
-        # process cannot read, so fail loudly instead of saving garbage.
-        if isinstance(leaf, jax.Array) and not leaf.is_fully_addressable:
-            raise ValueError(
-                f"cannot checkpoint non-fully-addressable array at {key!r} "
-                "— multi-host save needs a cross-host gather (ROADMAP "
-                "residue); checkpoint from a single-host run")
-        flat[key] = np.asarray(leaf)
-    return flat
+# Cross-process barrier timeout: a process that dies mid-save leaves its
+# peers with a clean error here instead of a silent hang.
+_BARRIER_TIMEOUT_MS = 180_000
+_barrier_seq = itertools.count()
 
 
 def _key_str(k):
@@ -51,17 +82,77 @@ def _key_str(k):
     return str(k)
 
 
-# -- self-describing trees (source state) -----------------------------------
+def _shard_npz(pid: int) -> str:
+    return f"shard-{pid:05d}.npz"
 
-_SCHEMA_KEY = "__structured_schema__"
-_STRUCT_PREFIX = "__structured__/"
+
+def _shard_json(pid: int) -> str:
+    return f"shard-{pid:05d}.json"
+
+
+def _resolve_index(index, shape) -> List[List[int]]:
+    """Concrete [[start, stop], ...] for a shard's global index (a tuple
+    of slices, possibly with None bounds / missing trailing dims)."""
+    out = []
+    for d, dim in enumerate(shape):
+        s = index[d] if d < len(index) else slice(None)
+        if s.step not in (None, 1):
+            raise ValueError(f"non-unit-stride shard index {index!r}")
+        out.append([0 if s.start is None else int(s.start),
+                    dim if s.stop is None else int(s.stop)])
+    return out
+
+
+def _full_index(shape) -> List[List[int]]:
+    return [[0, d] for d in shape]
+
+
+def _as_slices(index: Sequence[Sequence[int]]) -> Tuple[slice, ...]:
+    return tuple(slice(a, b) for a, b in index)
+
+
+def _atomic_write(path: str, write_fn) -> None:
+    """Write via ``write_fn(file_object)`` to a temp file in the target
+    directory, then ``os.replace`` — readers never observe a torn file."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _barrier(name: str, process_count: int) -> None:
+    """Host-side cross-process rendezvous through the jax.distributed
+    coordination service (no device computation — safe from a background
+    writer thread). No-op single-process."""
+    if process_count <= 1:
+        return
+    from jax._src import distributed
+    client = distributed.global_state.client
+    if client is None:
+        raise RuntimeError(
+            "multi-process checkpoint save needs the jax.distributed "
+            "bootstrap (launch/multihost.py) for its completion barrier")
+    client.wait_at_barrier(name, _BARRIER_TIMEOUT_MS)
+
+
+# ---------------------------------------------------------------------------
+# structured (self-describing) encode/decode — shared by both formats
+# ---------------------------------------------------------------------------
 
 
 def _encode(obj, flat: Dict[str, Any], path: str) -> dict:
     """Encode an arbitrary pytree into (flat arrays, JSON schema). Scalars
-    live in the schema; array leaves go to ``flat`` under ``path``.
-    NamedTuples degrade to plain tuples — restore against a live template
-    (tree_unflatten) when the node type matters."""
+    live in the schema; array leaves are COPIED into ``flat`` under
+    ``path`` (a copy, so a snapshot stays frozen while the source keeps
+    mutating its live buffers). NamedTuples degrade to plain tuples —
+    restore against a live template (tree_unflatten) when the node type
+    matters."""
     if obj is None:
         return {"t": "none"}
     if isinstance(obj, (bool, int, float, str)):
@@ -75,7 +166,11 @@ def _encode(obj, flat: Dict[str, Any], path: str) -> dict:
         return {"t": "tuple" if isinstance(obj, tuple) else "list",
                 "items": [_encode(v, flat, f"{path}/{i}")
                           for i, v in enumerate(obj)]}
-    arr = np.asarray(obj)
+    if isinstance(obj, jax.Array) and not obj.is_fully_addressable:
+        raise TypeError(
+            f"structured state at {path!r} holds a non-fully-addressable "
+            "array — source state must be host-local (per-process)")
+    arr = np.array(obj)                      # always copy
     if arr.dtype == object:
         raise TypeError(f"cannot checkpoint object-dtype leaf at {path!r}")
     flat[path] = arr
@@ -99,36 +194,426 @@ def _decode(node: dict, data) -> Any:
     raise ValueError(f"unknown schema node type {t!r}")
 
 
+# ---------------------------------------------------------------------------
+# snapshot: synchronous device -> host copy of this process's shards
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _LeafSnap:
+    shape: List[int]
+    dtype: str
+    spec: Optional[list]                      # saved PartitionSpec, if any
+    shards: List[Tuple[List[List[int]], np.ndarray]]  # (index, host copy)
+
+
+@dataclass
+class Snapshot:
+    """Host-side, immutable copy of everything this process contributes to
+    one checkpoint — safe to hand to a background writer while training
+    mutates the live arrays."""
+    leaves: Dict[str, _LeafSnap]
+    structured: Dict[str, dict] = field(default_factory=dict)   # schemas
+    arrays: Dict[str, np.ndarray] = field(default_factory=dict)  # npz extras
+    mesh: Optional[Dict[str, int]] = None
+
+
+def snapshot(tree, structured: Optional[Dict[str, Any]] = None) -> Snapshot:
+    """Copy this process's addressable replica-0 shards of every leaf (and
+    any ``structured`` trees) to host memory. This is the only part of a
+    save that must run synchronously with training; hand the result to
+    ``write_snapshot`` (or an ``AsyncCheckpointWriter``) for the disk
+    I/O. Works for single-device, sharded, and multi-host arrays alike —
+    no fully-addressable requirement."""
+    pid = jax.process_index()
+    leaves: Dict[str, _LeafSnap] = {}
+    mesh_desc = None
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_key_str(k) for k in path)
+        if isinstance(leaf, jax.Array):
+            spec = None
+            sh = leaf.sharding
+            if isinstance(sh, jax.sharding.NamedSharding):
+                # JSON-portable PartitionSpec: each dim is null | axis name
+                # | list of axis names — decoded by saved_shardings()
+                spec = [list(p) if isinstance(p, tuple) else p
+                        for p in sh.spec]
+                if mesh_desc is None:
+                    mesh_desc = {str(a): int(s)
+                                 for a, s in sh.mesh.shape.items()}
+            shards = [(_resolve_index(s.index, leaf.shape),
+                       np.array(s.data))
+                      for s in leaf.addressable_shards if s.replica_id == 0]
+            leaves[key] = _LeafSnap(list(leaf.shape), str(leaf.dtype),
+                                    spec, shards)
+        else:
+            arr = np.array(leaf)
+            # plain host leaves are identical across an SPMD fleet: one
+            # writer (process 0) is enough
+            shards = [(_full_index(arr.shape), arr)] if pid == 0 else []
+            leaves[key] = _LeafSnap(list(arr.shape), str(arr.dtype),
+                                    None, shards)
+    snap = Snapshot(leaves=leaves, mesh=mesh_desc)
+    for name, obj in (structured or {}).items():
+        if obj is None:
+            continue
+        snap.structured[name] = _encode(obj, snap.arrays,
+                                        _STRUCT_PREFIX + name)
+    return snap
+
+
+# ---------------------------------------------------------------------------
+# write: per-process shard files, barrier, process-0 manifest merge
+# ---------------------------------------------------------------------------
+
+
+def write_snapshot(path: str, snap: Snapshot,
+                   metadata: Optional[dict] = None) -> None:
+    """Persist one process's ``Snapshot`` under checkpoint directory
+    ``path`` and (on process 0, after the all-processes barrier) write the
+    merged ``manifest.json`` completion marker. Every process of the run
+    must call this with the same ``path``."""
+    pid = jax.process_index()
+    nproc = jax.process_count()
+    os.makedirs(path, exist_ok=True)
+
+    arrays = dict(snap.arrays)
+    tree_entries: Dict[str, dict] = {}
+    for key, leaf in snap.leaves.items():
+        shards = []
+        for i, (index, arr) in enumerate(leaf.shards):
+            npz_key = f"{key}@{i}"
+            arrays[npz_key] = arr
+            shards.append({"key": npz_key, "index": index})
+        tree_entries[key] = {"shape": leaf.shape, "dtype": leaf.dtype,
+                             "spec": leaf.spec, "shards": shards}
+
+    _atomic_write(os.path.join(path, _shard_npz(pid)),
+                  lambda f: np.savez(f, **arrays))
+    sidecar = {"process": pid, "tree": tree_entries,
+               "structured": snap.structured, "mesh": snap.mesh,
+               "metadata": metadata or {}}
+    _atomic_write(os.path.join(path, _shard_json(pid)),
+                  lambda f: f.write(json.dumps(sidecar).encode()))
+
+    # every process's shard files are on disk before the manifest (the
+    # completion marker) can name them
+    seq = next(_barrier_seq)
+    _barrier(f"ckpt:{os.path.basename(path)}:{seq}:shards", nproc)
+    if pid == 0:
+        _atomic_write(os.path.join(path, MANIFEST),
+                      lambda f: f.write(json.dumps(
+                          _merge_manifest(path, nproc)).encode()))
+    _barrier(f"ckpt:{os.path.basename(path)}:{seq}:done", nproc)
+
+
+def _merge_manifest(path: str, nproc: int) -> dict:
+    tree: Dict[str, dict] = {}
+    structured: Dict[str, dict] = {}
+    metadata: dict = {}
+    mesh = None
+    for pid in range(nproc):
+        with open(os.path.join(path, _shard_json(pid)),
+                  encoding="utf-8") as f:
+            sc = json.load(f)
+        fname = _shard_npz(pid)
+        for key, entry in sc["tree"].items():
+            tgt = tree.setdefault(key, {"shape": entry["shape"],
+                                        "dtype": entry["dtype"],
+                                        "spec": entry["spec"],
+                                        "shards": []})
+            tgt["shards"].extend(dict(s, file=fname)
+                                 for s in entry["shards"])
+        for name, schema in sc["structured"].items():
+            structured.setdefault(name, {})[str(pid)] = {
+                "file": fname, "schema": schema}
+        if pid == 0:
+            metadata = sc["metadata"]
+            mesh = sc.get("mesh")
+    return {"format": _FORMAT, "num_processes": nproc,
+            "metadata": metadata, "mesh": mesh,
+            "tree": tree, "structured": structured}
+
+
 def save(path: str, tree, metadata: dict | None = None,
          structured: Dict[str, Any] | None = None) -> None:
-    """``structured``: optional name -> self-describing pytree (see module
-    docstring); read back with ``restore_structured(path, name)``."""
-    flat = _flatten(tree)
-    if structured:
-        schemas = {name: _encode(obj, flat, _STRUCT_PREFIX + name)
-                   for name, obj in structured.items()}
-        flat[_SCHEMA_KEY] = json.dumps(schemas)
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
-                               suffix=".tmp")
-    try:
-        with os.fdopen(fd, "wb") as f:
-            np.savez(f, __metadata__=json.dumps(metadata or {}), **flat)
-        os.replace(tmp, path)
-    except BaseException:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-        raise
+    """Synchronous save: ``snapshot`` + ``write_snapshot``. ``structured``:
+    optional name -> self-describing pytree (see module docstring); read
+    back with ``restore_structured(path, name)``."""
+    write_snapshot(path, snapshot(tree, structured), metadata)
+
+
+# ---------------------------------------------------------------------------
+# read side
+# ---------------------------------------------------------------------------
+
+
+def is_complete(path: str) -> bool:
+    """True iff ``path`` is a restorable checkpoint: a manifest directory
+    whose completion marker landed, or a legacy single-file .npz."""
+    if os.path.isdir(path):
+        return os.path.exists(os.path.join(path, MANIFEST))
+    return os.path.isfile(path) and path.endswith(".npz")
+
+
+def _read_manifest(path: str) -> dict:
+    mpath = os.path.join(path, MANIFEST)
+    if not os.path.exists(mpath):
+        raise FileNotFoundError(
+            f"{path} has no {MANIFEST} — the save never completed "
+            "(killed mid-write); restore from an earlier step")
+    with open(mpath, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def read_metadata(path: str) -> dict:
+    """The ``metadata`` dict a checkpoint was saved with (``step``, and —
+    for Runtime checkpoints — the run config keys ``--resume`` validates
+    before attempting a restore)."""
+    if os.path.isdir(path):
+        return _read_manifest(path).get("metadata", {})
+    with np.load(path, allow_pickle=False) as data:
+        return json.loads(str(data["__metadata__"]))
+
+
+class _ShardFiles:
+    """Lazily-opened npz handles for a checkpoint directory."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._open: Dict[str, Any] = {}
+
+    def __getitem__(self, fname: str):
+        if fname not in self._open:
+            self._open[fname] = np.load(os.path.join(self.path, fname),
+                                        allow_pickle=False)
+        return self._open[fname]
+
+    def close(self):
+        for f in self._open.values():
+            f.close()
+        self._open.clear()
+
+
+def _assemble(key: str, entry: dict, files: _ShardFiles,
+              target: Sequence[Sequence[int]]) -> np.ndarray:
+    """Assemble the ``target`` index block of a leaf from whichever saved
+    shards overlap it — the elastic-resume core: the target block may cut
+    across saved shard boundaries arbitrarily."""
+    tgt_shape = tuple(b - a for a, b in target)
+    out = np.empty(tgt_shape, dtype=np.dtype(entry["dtype"]))
+    covered = 0
+    for shard in entry["shards"]:
+        src_idx = shard["index"]
+        dst, src = [], []
+        vol = 1
+        for (t0, t1), (s0, s1) in zip(target, src_idx):
+            lo, hi = max(t0, s0), min(t1, s1)
+            if lo >= hi:
+                vol = 0
+                break
+            dst.append(slice(lo - t0, hi - t0))
+            src.append(slice(lo - s0, hi - s0))
+            vol *= hi - lo
+        if vol == 0:
+            continue
+        data = files[shard["file"]][shard["key"]]
+        out[tuple(dst)] = data[tuple(src)]    # 0-d: out[()] = data[()]
+        covered += vol
+    want = int(np.prod(tgt_shape, dtype=np.int64)) if tgt_shape else 1
+    if covered != want:
+        raise ValueError(
+            f"checkpoint shards for {key!r} cover {covered}/{want} "
+            f"elements of index {list(target)} — shard files are missing "
+            "or the save was interrupted")
+    return out
+
+
+def _validate_tree(manifest: dict, template_keys: Sequence[str],
+                   path: str) -> None:
+    """Fail up front, naming mismatched keys, when the checkpoint was
+    written by a different arch/config than the current run — instead of
+    an opaque error deep inside pytree unflattening."""
+    saved = set(manifest["tree"])
+    want = set(template_keys)
+    missing = sorted(want - saved)
+    extra = sorted(saved - want)
+    if missing or extra:
+        def clip(keys):
+            return ", ".join(keys[:6]) + (" …" if len(keys) > 6 else "")
+        parts = [f"checkpoint {path} does not match this run's model/"
+                 "config (wrong --arch / --mode / optimizer?):"]
+        if missing:
+            parts.append(f" this run expects keys the checkpoint lacks: "
+                         f"[{clip(missing)}]")
+        if extra:
+            parts.append(f" the checkpoint has keys this run lacks: "
+                         f"[{clip(extra)}]")
+        raise ValueError("".join(parts))
+
+
+def _restore_leaf(key: str, entry: dict, files: _ShardFiles, sharding):
+    shape = tuple(entry["shape"])
+    if sharding is None:
+        return _assemble(key, entry, files, _full_index(shape))
+    imap = sharding.addressable_devices_indices_map(shape)
+    blocks: Dict[tuple, np.ndarray] = {}
+    arrays = []
+    for dev, idx in imap.items():
+        target = _resolve_index(idx, shape)
+        bkey = tuple(tuple(t) for t in target)
+        if bkey not in blocks:
+            blocks[bkey] = _assemble(key, entry, files, target)
+        arrays.append(jax.device_put(blocks[bkey], dev))
+    return jax.make_array_from_single_device_arrays(shape, sharding, arrays)
 
 
 def restore(path: str, like, shardings=None):
     """Restore into the structure of ``like`` (values replaced).
 
     ``shardings``: optional tree of ``jax.sharding.Sharding`` matching
-    ``like`` — each leaf is ``device_put`` onto its sharding as it is
-    read (the sharded-aware restore path: model-sharded params land
-    directly on the mesh, instead of materialising a host-replicated
-    numpy tree the caller then re-places)."""
+    ``like`` — each leaf is reassembled from its saved shards DIRECTLY
+    onto that sharding via ``make_array_from_single_device_arrays``
+    (model-sharded params land distributed; no host-replicated tree).
+    The target shardings may come from a different mesh shape or process
+    count than the save (elastic resume); without ``shardings`` each leaf
+    comes back as a fully-assembled numpy array."""
+    if not os.path.isdir(path):
+        return _restore_legacy(path, like, shardings)
+    manifest = _read_manifest(path)
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = ["/".join(_key_str(k) for k in pk) for pk, _ in paths_leaves]
+    _validate_tree(manifest, keys, path)
+    if shardings is None:
+        shard_leaves = [None] * len(paths_leaves)
+    else:
+        shard_leaves = jax.tree_util.tree_leaves(shardings)
+        if len(shard_leaves) != len(paths_leaves):
+            raise ValueError(
+                f"shardings tree has {len(shard_leaves)} leaves but "
+                f"the template has {len(paths_leaves)}")
+    files = _ShardFiles(path)
+    try:
+        leaves = []
+        for key, (_, leaf), sharding in zip(keys, paths_leaves,
+                                            shard_leaves):
+            entry = manifest["tree"][key]
+            if hasattr(leaf, "dtype") \
+                    and tuple(entry["shape"]) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: {tuple(entry['shape'])} "
+                    f"vs {tuple(leaf.shape)}")
+            leaves.append(_restore_leaf(key, entry, files, sharding))
+    finally:
+        files.close()
+    meta = manifest.get("metadata", {})
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def saved_shardings(path: str, like_shardings):
+    """Rebuild each leaf's SAVED partition spec as a NamedSharding on the
+    LIVE mesh (taken from ``like_shardings``), for bit-exact same-mesh
+    resume: by checkpoint time GSPMD may have normalised the run's specs
+    away from the init-time ones (e.g. dropping a size-1 mesh axis), and
+    restoring onto the exact saved specs makes the resumed step's compiled
+    program — and therefore its bits — identical to the uninterrupted
+    run's. Returns ``None`` when the checkpoint is legacy or was saved on
+    a different mesh shape (elastic resume: the caller keeps its own
+    shardings and the leaves reshard). Leaves the checkpoint recorded no
+    spec for keep their ``like_shardings`` entry."""
+    if not os.path.isdir(path):
+        return None
+    manifest = _read_manifest(path)
+    leaves, treedef = jax.tree_util.tree_flatten(like_shardings)
+    mesh = next((s.mesh for s in leaves
+                 if isinstance(s, jax.sharding.NamedSharding)), None)
+    if mesh is None:
+        return None
+    desc = {str(a): int(s) for a, s in mesh.shape.items()}
+    if manifest.get("mesh") != desc:
+        return None
+    out = []
+    for pk, fallback in jax.tree_util.tree_flatten_with_path(
+            like_shardings)[0]:
+        key = "/".join(_key_str(k) for k in pk)
+        entry = manifest["tree"].get(key) or {}
+        spec = entry.get("spec")
+        out.append(fallback if spec is None else jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(
+                *[tuple(p) if isinstance(p, list) else p for p in spec])))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_flat(path: str):
+    """(flat key -> fully-assembled numpy array, metadata) for every
+    learner-tree leaf — format-agnostic; the test/debug view of a
+    checkpoint's contents."""
+    if not os.path.isdir(path):
+        with np.load(path, allow_pickle=False) as data:
+            meta = json.loads(str(data["__metadata__"]))
+            flat = {k: np.asarray(data[k]) for k in data.files
+                    if k != "__metadata__" and k != _SCHEMA_KEY
+                    and not k.startswith(_STRUCT_PREFIX)}
+            return flat, meta
+    manifest = _read_manifest(path)
+    files = _ShardFiles(path)
+    try:
+        flat = {key: _assemble(key, entry, files,
+                               _full_index(tuple(entry["shape"])))
+                for key, entry in manifest["tree"].items()}
+    finally:
+        files.close()
+    return flat, manifest.get("metadata", {})
+
+
+def restore_structured(path: str, name: str):
+    """Restore THIS PROCESS's self-describing tree saved via
+    ``save(..., structured={name: tree})``. ``None`` when the checkpoint
+    predates it, the name is absent, or the checkpoint was written by a
+    different process count (source state is per-process; the caller
+    starts that piece fresh — the learner state still restores, elastically
+    resharded)."""
+    if not os.path.isdir(path):
+        return _restore_structured_legacy(path, name)
+    manifest = _read_manifest(path)
+    entry = manifest.get("structured", {}).get(name)
+    if entry is None:
+        return None
+    mine = entry.get(str(jax.process_index()))
+    if mine is None:
+        return None
+    with np.load(os.path.join(path, mine["file"]),
+                 allow_pickle=False) as data:
+        return _decode(mine["schema"], data)
+
+
+def latest_step_path(ckpt_dir: str):
+    """The highest-step COMPLETE checkpoint under ``ckpt_dir`` — manifest
+    directories without their completion marker (killed mid-write) are
+    skipped, so a torn save can never shadow the last good step."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for f in os.listdir(ckpt_dir):
+        name = f[:-4] if f.endswith(".npz") else f
+        if not name.startswith("step_"):
+            continue
+        try:
+            step = int(name[5:])
+        except ValueError:
+            continue
+        full = os.path.join(ckpt_dir, f)
+        if is_complete(full):
+            steps.append((step, full))
+    return max(steps)[1] if steps else None
+
+
+# ---------------------------------------------------------------------------
+# legacy single-file .npz checkpoints (pre-manifest) stay restorable
+# ---------------------------------------------------------------------------
+
+
+def _restore_legacy(path: str, like, shardings=None):
     with np.load(path, allow_pickle=False) as data:
         paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
         if shardings is None:
@@ -154,10 +639,7 @@ def restore(path: str, like, shardings=None):
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
 
 
-def restore_structured(path: str, name: str):
-    """Restore a self-describing tree saved via ``save(..., structured=
-    {name: tree})``; ``None`` when the checkpoint predates it (old
-    checkpoints stay restorable — the caller starts that piece fresh)."""
+def _restore_structured_legacy(path: str, name: str):
     with np.load(path, allow_pickle=False) as data:
         if _SCHEMA_KEY not in data:
             return None
@@ -165,16 +647,3 @@ def restore_structured(path: str, name: str):
         if name not in schemas:
             return None
         return _decode(schemas[name], data)
-
-
-def latest_step_path(ckpt_dir: str):
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = []
-    for f in os.listdir(ckpt_dir):
-        if f.startswith("step_") and f.endswith(".npz"):
-            try:
-                steps.append((int(f[5:-4]), os.path.join(ckpt_dir, f)))
-            except ValueError:
-                pass
-    return max(steps)[1] if steps else None

@@ -352,6 +352,13 @@ def shard_lm_batch(batch, mesh: Mesh, rules: Dict):
     return jax.tree.map(leaf, batch)
 
 
+def tree_shardings(tree):
+    """Tree of the CURRENT shardings of a (materialised) jax array tree —
+    the ``shardings=`` argument checkpoint.restore needs to reassemble a
+    sharded tree onto the live mesh (same-mesh or elastic resume)."""
+    return jax.tree.map(lambda x: x.sharding, tree)
+
+
 def replicate(tree, mesh: Mesh):
     """Constrain every leaf of ``tree`` to be fully replicated on ``mesh``
     (applied to grads in the sharded learner step: the constraint is where

@@ -12,6 +12,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.envs.base import Env, auto_reset
 
@@ -20,7 +21,10 @@ NUM_ACTIONS = 5
 NUM_FOOD = 3
 MAX_STEPS = 100
 
-_MOVES = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
+# numpy on purpose: a module-level jnp.array would initialise the jax
+# backend at import time, which forecloses jax.distributed.initialize()
+# (the multi-host bootstrap must run before any jax computation).
+_MOVES = np.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], np.int32)
 
 
 class GridState(NamedTuple):
@@ -53,7 +57,7 @@ def _reset(key):
 
 
 def _step(state, action, key):
-    agent = jnp.clip(state.agent + _MOVES[action], 0, SIZE - 1)
+    agent = jnp.clip(state.agent + jnp.asarray(_MOVES)[action], 0, SIZE - 1)
     on_food = (state.food == agent[None]).all(-1) & state.food_alive
     reward = on_food.sum().astype(jnp.float32)
     food_alive = state.food_alive & ~on_food

@@ -27,6 +27,14 @@ def bootstrap(coordinator=None, num_processes=1, process_id=0):
     query so ``jax.devices()`` returns the GLOBAL device set."""
     import jax
     if coordinator:
+        # On the CPU backend multi-process SPMD (device_put onto
+        # non-addressable shardings, jitted collectives, checkpoint
+        # reassembly via make_array_from_single_device_arrays) only works
+        # with the gloo cross-host collectives implementation; the default
+        # raises "Multiprocess computations aren't implemented on the CPU
+        # backend". Must be set BEFORE jax.distributed.initialize. No-op
+        # for TPU/GPU backends, which ignore the cpu_collectives knob.
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
         jax.distributed.initialize(
             coordinator_address=coordinator,
             num_processes=num_processes,

@@ -146,10 +146,13 @@ def _lm_mesh_setup(args, params, axes):
 
 
 def _restore_shardings(params, opt_state):
-    """extras entry telling --resume to device_put each restored leaf onto
-    the mesh as it is read (checkpoint.restore ``shardings=``)."""
-    return {"params": jax.tree.map(lambda x: x.sharding, params),
-            "opt_state": jax.tree.map(lambda x: x.sharding, opt_state)}
+    """extras entry telling --resume to reassemble each restored leaf onto
+    the LIVE mesh layout (checkpoint.restore ``shardings=``). Because the
+    shardings come from the freshly-initialised state — not the
+    checkpoint — this is also the elastic-resume path: a checkpoint from
+    mesh (2,2) restores onto (4,1) by re-slicing the saved shards."""
+    from repro.distributed.sharding import tree_shardings
+    return tree_shardings({"params": params, "opt_state": opt_state})
 
 
 def _apply_impls(cfg, args):
@@ -232,6 +235,19 @@ def build_lm(args):
 
 _BUILDERS = {"rl-agent": build_rl_agent, "lm-rl": build_lm_rl,
              "lm": build_lm}
+
+
+def _checkpoint_meta(args):
+    """Config identity recorded in every checkpoint manifest and validated
+    on --resume: restoring an lm checkpoint into an rl-agent run (or a
+    different arch/env) must fail loudly up front, naming the mismatched
+    keys — not die deep in tree-structure assembly."""
+    meta = {"mode": args.mode}
+    if args.mode == "rl-agent":
+        meta["env"] = args.env
+    else:
+        meta["arch"] = args.arch
+    return meta
 
 
 def main(argv=None):
@@ -335,9 +351,28 @@ def main(argv=None):
             print(f"--resume: no checkpoint under {args.checkpoint_dir}, "
                   "starting fresh")
         else:
+            # Cheap pre-flight: the manifest's recorded config identity
+            # must match this run before any shard is read.
+            saved_meta = ckpt_lib.read_metadata(path)
+            want = _checkpoint_meta(args)
+            bad = sorted(k for k in want
+                         if k in saved_meta and saved_meta[k] != want[k])
+            if bad:
+                detail = ", ".join(
+                    f"{k}: checkpoint={saved_meta[k]!r} run={want[k]!r}"
+                    for k in bad)
+                raise SystemExit(
+                    f"--resume: checkpoint {path} was written by a "
+                    f"different configuration ({detail})")
             # sharded-aware restore: with restore_shardings each leaf is
-            # device_put straight onto its mesh sharding (model-sharded
-            # params land distributed, no replicated host tree).
+            # reassembled straight onto its live mesh sharding
+            # (model-sharded params land distributed, no replicated host
+            # tree) — including elastic resume onto a different mesh.
+            # Same-mesh, prefer the SAVED specs (bit-exact resume: the
+            # resumed step then compiles the exact steady-state program).
+            if restore_shardings is not None:
+                restore_shardings = (ckpt_lib.saved_shardings(
+                    path, restore_shardings) or restore_shardings)
             restored, meta = ckpt_lib.restore(
                 path, {"params": params, "opt_state": opt_state},
                 shardings=restore_shardings)
@@ -362,7 +397,8 @@ def main(argv=None):
     runtime = Runtime(source, step_fn, params, opt_state,
                       total_steps=args.steps, start_step=start_step,
                       checkpoint_dir=args.checkpoint_dir,
-                      checkpoint_every=args.checkpoint_every, **extras)
+                      checkpoint_every=args.checkpoint_every,
+                      checkpoint_meta=_checkpoint_meta(args), **extras)
     runtime.run()
     return runtime.params
 

@@ -1,7 +1,9 @@
 import glob
 import os
 import re
+import shutil
 import signal
+import socket
 import subprocess
 import sys
 import time
@@ -52,16 +54,31 @@ def run_forced(args=None, *, script=None, devices=8, timeout=600,
     return proc
 
 
+def _ckpt_step(path: str) -> int:
+    """Step number of a ``step_N`` manifest dir or legacy ``step_N.npz``."""
+    name = os.path.basename(path.rstrip("/"))
+    return int(name[5:-4] if name.endswith(".npz") else name[5:])
+
+
+def prune_after(ckpt_dir, boundary_step):
+    """Remove every checkpoint (manifest dir or legacy .npz) later than
+    ``boundary_step`` so --resume provably starts from mid-run state."""
+    for f in glob.glob(os.path.join(ckpt_dir, "step_*")):
+        if _ckpt_step(f) > boundary_step:
+            shutil.rmtree(f) if os.path.isdir(f) else os.remove(f)
+
+
 def sigkill_at_boundary(cmd, ckpt_dir, boundary_step, *, devices,
                         deadline_s=540):
     """Launch ``python *cmd`` under forced devices, SIGKILL it once the
-    ``step_{boundary_step}`` boundary checkpoint lands, then prune any
-    later checkpoints so a subsequent --resume provably starts from
-    mid-run state (if the run outraces the kill, pruning still leaves a
-    genuine boundary checkpoint — the kill adds realism, not
-    correctness). Shared by the rl-agent (test_resume) and lm
-    (test_mesh2d) kill/resume suites."""
-    marker = os.path.join(ckpt_dir, f"step_{boundary_step}.npz")
+    ``step_{boundary_step}`` boundary checkpoint COMPLETES (its
+    ``manifest.json`` completion marker exists — shard files may land
+    earlier), then prune any later checkpoints so a subsequent --resume
+    provably starts from mid-run state (if the run outraces the kill,
+    pruning still leaves a genuine boundary checkpoint — the kill adds
+    realism, not correctness). Shared by the rl-agent (test_resume) and
+    lm (test_mesh2d) kill/resume suites."""
+    marker = os.path.join(ckpt_dir, f"step_{boundary_step}", "manifest.json")
     p = subprocess.Popen([sys.executable] + list(cmd),
                          env=forced_cpu_env(devices),
                          stdout=subprocess.DEVNULL,
@@ -78,6 +95,77 @@ def sigkill_at_boundary(cmd, ckpt_dir, boundary_step, *, devices,
         if p.poll() is None:
             p.kill()
     assert os.path.exists(marker)
-    for f in glob.glob(os.path.join(ckpt_dir, "step_*.npz")):
-        if int(os.path.basename(f)[5:-4]) > boundary_step:
-            os.remove(f)
+    prune_after(ckpt_dir, boundary_step)
+
+
+# ---------------------------------------------------------------------------
+# Coordinated multi-process harness (real jax.distributed over loopback,
+# gloo CPU collectives): each test process is one host of the fleet.
+# ---------------------------------------------------------------------------
+
+
+def free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+_CONNECT_ERRS = ("DEADLINE_EXCEEDED", "UNAVAILABLE", "failed to connect",
+                 "Connection refused", "Permission denied",
+                 "coordination service")
+
+
+def run_coordinated(cmd, num_processes, *, devices=1, timeout=600,
+                    kill_marker=None, deadline_s=540):
+    """Run ``python *cmd`` once per process with
+    --coordinator/--num-processes/--process-id appended (fresh loopback
+    port), returning the list of (returncode, output) per process.
+
+    With ``kill_marker`` set (a path), every process is SIGKILLed as soon
+    as the marker exists — the multi-host mid-run kill harness.
+
+    Skips the calling test when the fleet cannot form because the
+    environment forbids loopback gRPC (sandboxed runners) — the CI
+    sharded-cpu job runs the same flow unconditionally."""
+    import pytest
+
+    port = free_port()
+    procs = []
+    for pid in range(num_processes):
+        full = [sys.executable] + list(cmd) + [
+            "--coordinator", f"127.0.0.1:{port}",
+            "--num-processes", str(num_processes),
+            "--process-id", str(pid)]
+        procs.append(subprocess.Popen(
+            full, env=forced_cpu_env(devices),
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True))
+    killed = False
+    if kill_marker is not None:
+        deadline = time.time() + deadline_s
+        while (time.time() < deadline
+               and any(p.poll() is None for p in procs)):
+            if os.path.exists(kill_marker):
+                for p in procs:
+                    if p.poll() is None:
+                        p.send_signal(signal.SIGKILL)
+                killed = True
+                break
+            time.sleep(0.05)
+    results = []
+    try:
+        for p in procs:
+            out, _ = p.communicate(timeout=timeout)
+            results.append((p.returncode, out))
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    if not killed:
+        blob = "\n".join(out for _, out in results)
+        if (any(rc != 0 for rc, _ in results)
+                and any(e in blob for e in _CONNECT_ERRS)):
+            pytest.skip("loopback jax.distributed unavailable "
+                        "in this environment")
+    return results

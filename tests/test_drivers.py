@@ -29,7 +29,7 @@ def test_train_cli_rl_agent(capsys):
     with tempfile.TemporaryDirectory() as d:
         T.main(["--mode", "rl-agent", "--env", "catch", "--steps", "6",
                 "--batch", "8", "--checkpoint-dir", d])
-        assert os.path.exists(os.path.join(d, "step_6.npz"))
+        assert os.path.exists(os.path.join(d, "step_6", "manifest.json"))
     out = capsys.readouterr().out
     assert "reward/step" in out
 
@@ -97,7 +97,7 @@ def test_checkpoint_restore_resumes_training():
                                           cfg.vocab_size)}
     params, opt_state, _ = step(params, opt_state, jnp.int32(0), batch)
     with tempfile.TemporaryDirectory() as d:
-        path = os.path.join(d, "step_1.npz")
+        path = os.path.join(d, "step_1")
         ckpt.save(path, {"params": params, "opt": opt_state}, {"step": 1})
         restored, meta = ckpt.restore(path, {"params": params,
                                              "opt": opt_state})

@@ -361,7 +361,7 @@ def test_runtime_crash_checkpoint_saves_progress(tmp_path):
     with pytest.raises(TimeoutError):
         rt.run()
     path = ckpt_lib.latest_step_path(str(tmp_path))
-    assert path is not None and path.endswith("step_3.npz")
+    assert path is not None and os.path.basename(path) == "step_3"
     restored, meta = ckpt_lib.restore(
         path, {"params": params, "opt_state": opt.init(params)})
     assert meta["step"] == 3
@@ -403,7 +403,7 @@ def test_runtime_crash_after_update_saves_next_step(tmp_path):
         rt.run()
     # update 2 IS in rt.params, so the checkpoint must say "run step 3 next"
     path = ckpt_lib.latest_step_path(str(tmp_path))
-    assert path.endswith("step_3.npz")
+    assert os.path.basename(path) == "step_3"
     _, meta = ckpt_lib.restore(
         path, {"params": params, "opt_state": opt.init(params)})
     assert meta["step"] == 3
@@ -432,7 +432,7 @@ def test_train_cli_resume_continues_from_saved_step(tmp_path, capsys):
     d = str(tmp_path)
     args = ["--mode", "rl-agent", "--env", "catch", "--batch", "8"]
     train_cli.main(args + ["--steps", "3", "--checkpoint-dir", d])
-    assert os.path.exists(os.path.join(tmp_path, "step_3.npz"))
+    assert os.path.exists(os.path.join(tmp_path, "step_3", "manifest.json"))
     capsys.readouterr()
     train_cli.main(args + ["--steps", "5", "--checkpoint-dir", d,
                            "--resume"])
@@ -440,7 +440,7 @@ def test_train_cli_resume_continues_from_saved_step(tmp_path, capsys):
     assert "resumed" in out and "at step 3" in out
     # the continued loop logs steps 3.. only — the schedule did not restart
     assert "step     3" in out and "step     0" not in out
-    assert os.path.exists(os.path.join(tmp_path, "step_5.npz"))
+    assert os.path.exists(os.path.join(tmp_path, "step_5", "manifest.json"))
 
 
 def test_runtime_resume_past_end_writes_no_relabeled_checkpoint(tmp_path):

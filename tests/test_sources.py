@@ -128,7 +128,7 @@ def test_runtime_trains_logs_and_checkpoints(tmp_path):
                  log_every=2, checkpoint_dir=str(tmp_path),
                  print_fn=lines.append)
     rt.run()
-    assert (tmp_path / "step_4.npz").exists()
+    assert (tmp_path / "step_4" / "manifest.json").exists()
     assert any("reward/step=" in ln for ln in lines)
     assert rt.frames == 4 * T * B
     assert bool(jnp.isfinite(rt.metrics["loss"]))

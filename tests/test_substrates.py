@@ -112,7 +112,7 @@ def test_checkpoint_roundtrip():
     tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
             "opt": [{"m": jnp.ones(4)}], "step": jnp.int32(7)}
     with tempfile.TemporaryDirectory() as d:
-        path = os.path.join(d, "step_7.npz")
+        path = os.path.join(d, "step_7")
         ckpt.save(path, tree, {"step": 7})
         restored, meta = ckpt.restore(path, tree)
         assert meta["step"] == 7
